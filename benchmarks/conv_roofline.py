@@ -1,0 +1,120 @@
+"""§Perf hillclimb #3: the paper's own workload (FFT conv) on the
+production 16x16 mesh — baseline wFFT, paper-faithful nFFT, then
+beyond-paper variants:
+
+  repG  : replicate the (cheap) kernel transform instead of a2a-ing G
+  bf16  : bf16 CGEMM operands with f32 accumulation (halves hot bytes,
+          doubles MXU rate)
+  4m    : 4-matmul complex product (vs default 3M) for comparison
+
+Per variant: per-device collective bytes (compiled HLO, loop-trip aware),
+analytic CGEMM/transform FLOPs from ConvSpec, roofline terms, plus measured
+wall time on an 8-device host mesh (2x4).
+
+CSV: name,us_per_call(8dev wall),derived(collective bytes/dev @pod256)
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+_WORKER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(ndev)d"
+import sys, json, time
+import jax, jax.numpy as jnp, numpy as np
+from repro.parallel import fft_conv2d_sharded
+from repro.core import make_spec
+from repro.launch.roofline import parse_collectives, roofline_terms, \
+    PEAK_FLOPS, HBM_BW
+mesh = jax.make_mesh((%(nd)d, %(nm)d), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+spec = json.loads(sys.argv[1])
+variant = spec["variant"]
+kw = dict(padding=spec["pad"], strategy="nfft")
+if variant == "wfft":
+    kw["strategy"] = "wfft"
+elif variant == "nfft":
+    pass
+elif variant == "nfft_repG":
+    kw["replicate_kernel_transform"] = True
+elif variant == "nfft_repG_bf16":
+    kw["replicate_kernel_transform"] = True
+    kw["compute_dtype"] = jnp.bfloat16
+elif variant == "nfft_4m":
+    kw["three_m"] = False
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.standard_normal(
+    (spec["B"], spec["C"], spec["H"], spec["W"])), jnp.float32)
+k = jnp.asarray(rng.standard_normal(
+    (spec["Co"], spec["C"], spec["kh"], spec["kh"])), jnp.float32)
+f = jax.jit(lambda a, b: fft_conv2d_sharded(a, b, mesh, **kw))
+lowered = f.lower(x, k)
+comp = lowered.compile()
+coll = parse_collectives(comp.as_text())
+out = {"coll_bytes_dev": coll["total_bytes"], "counts": coll["counts"]}
+if spec["measure"]:
+    jax.block_until_ready(f(x, k))
+    ts = []
+    for _ in range(spec["reps"]):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(x, k))
+        ts.append(time.perf_counter() - t0)
+    out["wall_s"] = float(np.median(ts))
+print("RESULT" + json.dumps(out))
+"""
+
+VARIANTS = ("wfft", "nfft", "nfft_repG", "nfft_repG_bf16", "nfft_4m")
+
+
+def run(layer, variant, *, ndev, nd, nm, measure, reps=3):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    spec = dict(layer, variant=variant, measure=measure, reps=reps)
+    worker = _WORKER % dict(ndev=ndev, nd=nd, nm=nm)
+    r = subprocess.run([sys.executable, "-c", worker, json.dumps(spec)],
+                       env=env, capture_output=True, text=True,
+                       timeout=1200)
+    if r.returncode != 0:
+        raise RuntimeError(f"{variant}: {r.stderr[-3000:]}")
+    line = [ln for ln in r.stdout.splitlines()
+            if ln.startswith("RESULT")][0]
+    return json.loads(line[len("RESULT"):])
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--layer", default="Vconv4.2")
+    ap.add_argument("--batch", type=int, default=128,
+                    help="analysis batch (production scale)")
+    ap.add_argument("--measure-batch", type=int, default=8)
+    ap.add_argument("--json-out", default="")
+    args = ap.parse_args(argv)
+
+    from repro.configs.paper_convs import TABLE1
+    lay = {l.name: l for l in TABLE1}[args.layer]
+    base = dict(C=lay.C, Co=lay.Cout, H=lay.H, W=lay.W, kh=lay.kh,
+                pad=lay.pad)
+
+    print(f"# conv_roofline {args.layer}: analysis B={args.batch} on 16x16 "
+          f"(256 chips); wall time B={args.measure_batch} on 2x4 host mesh")
+    print("name,us_per_call,derived")
+    results = {}
+    for v in VARIANTS:
+        ana = run(dict(base, B=args.batch), v, ndev=256, nd=16, nm=16,
+                  measure=False)
+        wall = run(dict(base, B=args.measure_batch), v, ndev=8, nd=2, nm=4,
+                   measure=True)
+        results[v] = {"analysis": ana, "wall": wall}
+        print(f"conv_roofline/{args.layer}/{v},"
+              f"{wall['wall_s']*1e6:.0f},{ana['coll_bytes_dev']:.3e}")
+    if args.json_out:
+        with open(args.json_out, "w") as fh:
+            json.dump(results, fh, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,us_per_call,derived`` CSV rows (plus context columns).
+Full-scale (arch x shape x mesh) numbers come from the dry-run
+(`repro.launch.dryrun --all`) and are summarised in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer layers / reps (CI-sized)")
+    args = ap.parse_args()
+
+    from benchmarks import table1_layers, fig56_speedup, fig78_memrate
+    print("name,us_per_call,derived")
+    table1_layers.main(["--batch", "1", "--reps", "2"] if args.quick
+                       else ["--batch", "2", "--reps", "3"])
+    sys.stdout.flush()
+    fig56_speedup.main(["--quick", "--reps", "3"] if args.quick
+                       else ["--reps", "5"])
+    sys.stdout.flush()
+    fig78_memrate.main()
+    sys.stdout.flush()
+    _conv_roofline_rows()
+
+
+def _conv_roofline_rows():
+    """§Perf conv hillclimb rows (from the saved production-mesh analysis;
+    regenerate with `python -m benchmarks.conv_roofline`)."""
+    import json
+    import os
+    path = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "conv_roofline_vconv42.json")
+    if not os.path.exists(path):
+        print("# conv_roofline: no cached analysis; run "
+              "`python -m benchmarks.conv_roofline`")
+        return
+    print("# conv_roofline Vconv4.2 (cached 16x16-mesh analysis; wall on "
+          "8-dev host) — name,us_per_call,derived(coll bytes/dev)")
+    with open(path) as fh:
+        res = json.load(fh)
+    for v, r in res.items():
+        wall = r.get("wall", {}).get("wall_s", 0.0)
+        print(f"conv_roofline/Vconv4.2/{v},{wall*1e6:.0f},"
+              f"{r['analysis']['coll_bytes_dev']:.3e}")
+
+
+if __name__ == "__main__":
+    main()

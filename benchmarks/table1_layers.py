@@ -1,0 +1,73 @@
+"""Paper Table I: the 17 AlexNet/VGG/ResNet unit-stride conv layers.
+
+Measures wall time of the FFT-based convolution vs the direct oracle on
+this host (CPU; batch reduced via --batch for tractability) and checks
+correctness per layer. The full-size cells are exercised by the dry-run.
+
+CSV: name,us_per_call,derived   (derived = effective GFLOP/s of the
+direct-conv FLOP count, i.e. the paper's normalisation)
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_convs import TABLE1
+from repro.core import fft_conv2d, conv2d_direct, make_spec
+
+
+def _time(f, *args, reps=3):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def run(batch=2, reps=3, layers=None, check=True):
+    rows = []
+    rng = np.random.default_rng(0)
+    for layer in TABLE1:
+        if layers and layer.name not in layers:
+            continue
+        x = jnp.asarray(rng.standard_normal(
+            (batch, layer.C, layer.H, layer.W)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal(
+            (layer.Cout, layer.C, layer.kh, layer.kw)), jnp.float32)
+        f_fft = jax.jit(lambda x, k, p=layer.pad: fft_conv2d(x, k, padding=p))
+        f_dir = jax.jit(lambda x, k, p=layer.pad: conv2d_direct(
+            x, k, padding=p))
+        if check:
+            y, y0 = f_fft(x, k), f_dir(x, k)
+            err = float(jnp.max(jnp.abs(y - y0))
+                        / (jnp.max(jnp.abs(y0)) + 1e-9))
+            assert err < 1e-4, (layer.name, err)
+        t_fft = _time(f_fft, x, k, reps=reps)
+        t_dir = _time(f_dir, x, k, reps=reps)
+        spec = make_spec(x.shape, k.shape, layer.pad)
+        gflops = spec.direct_flops() / 1e9
+        rows.append((layer.name, t_fft * 1e6, gflops / t_fft,
+                     t_dir * 1e6, t_dir / t_fft))
+    return rows
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args(argv)
+    print("# Table I — name,us_per_call,derived(GFLOP/s)"
+          ",direct_us,speedup_vs_direct")
+    for name, us, gfps, dus, sp in run(batch=args.batch, reps=args.reps):
+        print(f"table1/{name},{us:.0f},{gfps:.2f},{dus:.0f},{sp:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""End-to-end driver #3: batched serving (prefill + greedy decode).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-2.7b \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    if "--smoke" not in args:
+        args.append("--smoke")
+    main(args)

@@ -1,0 +1,79 @@
+"""End-to-end driver #1: train a small CNN whose conv layers run through
+the paper's FFT-based convolution (custom VJP), on synthetic images.
+
+    PYTHONPATH=src python examples/train_cnn_fftconv.py --steps 60
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fft_conv2d
+from repro.data import DataConfig, image_batch
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def init_params(key):
+    ks = jax.random.split(key, 4)
+    init = lambda k, s: 0.1 * jax.random.normal(k, s, jnp.float32)
+    return {
+        "c1": init(ks[0], (16, 3, 3, 3)),
+        "c2": init(ks[1], (32, 16, 3, 3)),
+        "w": init(ks[2], (32 * 8 * 8, 10)),
+        "b": jnp.zeros((10,), jnp.float32),
+    }
+
+
+def forward(p, x):
+    h = jax.nn.relu(fft_conv2d(x, p["c1"], padding=1))          # 32x32
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
+                              (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+    h = jax.nn.relu(fft_conv2d(h, p["c2"], padding=1))          # 16x16
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
+                              (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+    h = h.reshape(h.shape[0], -1)                               # 8x8x32
+    return h @ p["w"] + p["b"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=32)
+    args = ap.parse_args()
+
+    params = init_params(jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=args.steps,
+                          weight_decay=0.0)
+    opt = adamw_init(params)
+    dc = DataConfig(vocab=0, seq_len=0, global_batch=args.batch, seed=0,
+                    kind="images")
+
+    @jax.jit
+    def step(params, opt, x, y):
+        def loss_fn(p):
+            logits = forward(p, x)
+            onehot = jax.nn.one_hot(y, 10)
+            return -jnp.mean(jnp.sum(
+                jax.nn.log_softmax(logits) * onehot, -1))
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt, _ = adamw_update(grads, opt, params, opt_cfg)
+        return params, opt, loss
+
+    t0 = time.time()
+    for i in range(args.steps):
+        b = image_batch(dc, i)
+        params, opt, loss = step(params, opt, b["images"], b["labels"])
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss {float(loss):.4f}")
+    b = image_batch(dc, 10_000)
+    acc = float(jnp.mean(jnp.argmax(forward(params, b["images"]), -1)
+                         == b["labels"]))
+    print(f"held-out acc {acc:.2f} ({time.time()-t0:.1f}s) — "
+          "conv layers ran through fft_conv2d fwd+bwd")
+    assert float(loss) < 2.5, "training through FFT conv failed to learn"
+
+
+if __name__ == "__main__":
+    main()

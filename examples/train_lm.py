@@ -1,0 +1,17 @@
+"""End-to-end driver #2: LM pretraining via the launcher (any --arch).
+
+Reduced configs run on CPU; the full configs are what the multi-pod dry-run
+lowers. Checkpointing/resume and the straggler watchdog are exercised here.
+
+    PYTHONPATH=src python examples/train_lm.py --arch qwen3-14b \
+        --steps 200 --batch 8 --seq 128
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    if "--smoke" not in args:
+        args.append("--smoke")
+    main(args)

@@ -1,0 +1,4 @@
+from repro.checkpoint.store import (save, save_async, wait_pending,
+                                    latest_step, restore)
+
+__all__ = ["save", "save_async", "wait_pending", "latest_step", "restore"]

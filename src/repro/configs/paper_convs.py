@@ -1,0 +1,41 @@
+"""Table I of the paper: 17 unit-stride convolutional layers from
+AlexNet (A), VGG (V) and ResNet (R), each at batch sizes 32/64/128."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvLayer:
+    name: str
+    C: int
+    Cout: int
+    H: int
+    W: int
+    kh: int
+    kw: int
+    pad: int = 1          # unit-stride, 'same'-style padding as in the nets
+
+
+# name, C, C', H_i x W_i, k
+TABLE1 = (
+    ConvLayer("Vconv1.1", 3, 64, 224, 224, 3, 3),
+    ConvLayer("Vconv1.2", 64, 64, 224, 224, 3, 3),
+    ConvLayer("Vconv2.1", 64, 128, 112, 112, 3, 3),
+    ConvLayer("Vconv2.2", 128, 128, 112, 112, 3, 3),
+    ConvLayer("Vconv3.1", 128, 256, 56, 56, 3, 3),
+    ConvLayer("Vconv3.2", 256, 256, 56, 56, 3, 3),
+    ConvLayer("Vconv4.1", 256, 512, 28, 28, 3, 3),
+    ConvLayer("Vconv4.2", 512, 512, 28, 28, 3, 3),
+    ConvLayer("Vconv5", 512, 512, 14, 14, 3, 3),
+    ConvLayer("Aconv2", 48, 128, 27, 27, 5, 5, pad=2),
+    ConvLayer("Aconv3", 256, 384, 13, 13, 3, 3),
+    ConvLayer("Aconv4", 192, 192, 13, 13, 3, 3),
+    ConvLayer("Aconv5", 192, 128, 13, 13, 3, 3),
+    ConvLayer("Rconv2.2", 64, 64, 56, 56, 3, 3),
+    ConvLayer("Rconv3.2", 128, 128, 28, 28, 3, 3),
+    ConvLayer("Rconv4.2", 256, 256, 14, 14, 3, 3),
+    ConvLayer("Rconv5.2", 512, 512, 7, 7, 3, 3),
+)
+
+BATCH_SIZES = (32, 64, 128)

@@ -1,0 +1,81 @@
+"""DFT-as-matmul: the TPU-native replacement for NEON FFT butterflies.
+
+The paper computes 16x16 tile FFTs with hand-vectorised butterflies. A
+systolic MXU hates butterfly networks but eats dense 16x16 matmuls, so we
+express every (i)rfft2 of a tile as two small matrix products against
+precomputed DFT matrices:
+
+    rfft2(x)  = F_full @ x @ F_half^T            (x real, delta x delta)
+    irfft2(Z) = Re( (Finv @ Z) @ Wr^T )          (Z complex, delta x delta_h)
+
+where delta_h = delta//2 + 1 and Wr folds the Hermitian-redundant columns
+back with weight 2 (columns 0 and Nyquist with weight 1).
+
+All complex arithmetic is struct-of-arrays (separate real/imag planes);
+neither the MXU nor Pallas has a native complex dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax.numpy as jnp
+
+
+@functools.lru_cache(maxsize=None)
+def _dft_mats_np(delta: int):
+    """Precompute (numpy, float64 -> float32) all DFT matrices for a tile size."""
+    dh = delta // 2 + 1
+    u = np.arange(delta)
+    # Forward full DFT: F[u, h] = exp(-2i pi u h / delta)
+    ang = -2.0 * np.pi * np.outer(u, u) / delta
+    F = np.cos(ang) + 1j * np.sin(ang)
+    F_half = F[:dh, :]                      # rfft over the last axis
+    # Inverse full DFT (axis 0): Finv[h, u] = exp(+2i pi u h / delta) / delta
+    Finv = np.conj(F).T / delta
+    # Weighted inverse-rfft (last axis): x[., w] = Re(sum_v c_v Y[., v] e^{2i pi v w/delta})/delta
+    v = np.arange(dh)
+    c = np.where((v == 0) | (v == delta // 2), 1.0, 2.0)
+    angw = 2.0 * np.pi * np.outer(np.arange(delta), v) / delta
+    W = (np.cos(angw) + 1j * np.sin(angw)) * c[None, :] / delta   # (delta, dh)
+    return (
+        F.real.astype(np.float32), F.imag.astype(np.float32),
+        F_half.real.astype(np.float32), F_half.imag.astype(np.float32),
+        Finv.real.astype(np.float32), Finv.imag.astype(np.float32),
+        W.real.astype(np.float32), W.imag.astype(np.float32),
+    )
+
+
+def dft_mats(delta: int):
+    """jnp copies of all DFT matrices for tile size ``delta``."""
+    return tuple(jnp.asarray(m) for m in _dft_mats_np(delta))
+
+
+def rfft2_tiles(x, delta: int):
+    """Batched rfft2 of real tiles via matmul.
+
+    x: (..., delta, delta) real -> (Tr, Ti): (..., delta, delta_h).
+    """
+    Fr, Fi, Fhr, Fhi, *_ = dft_mats(delta)
+    # A = F @ x  (x real): 2 real matmuls
+    Ar = jnp.einsum("uh,...hw->...uw", Fr, x)
+    Ai = jnp.einsum("uh,...hw->...uw", Fi, x)
+    # T = A @ F_half^T: (Ar + iAi)(Fhr^T + iFhi^T)
+    Tr = jnp.einsum("...uw,vw->...uv", Ar, Fhr) - jnp.einsum("...uw,vw->...uv", Ai, Fhi)
+    Ti = jnp.einsum("...uw,vw->...uv", Ar, Fhi) + jnp.einsum("...uw,vw->...uv", Ai, Fhr)
+    return Tr, Ti
+
+
+def irfft2_tiles(Zr, Zi, delta: int):
+    """Batched irfft2 via matmul. (Zr, Zi): (..., delta, delta_h) -> (..., delta, delta) real."""
+    *_, Fvr, Fvi, Wr, Wi = dft_mats(delta)
+    # Y = Finv @ Z (complex x complex)
+    Yr = jnp.einsum("hu,...uv->...hv", Fvr, Zr) - jnp.einsum("hu,...uv->...hv", Fvi, Zi)
+    Yi = jnp.einsum("hu,...uv->...hv", Fvr, Zi) + jnp.einsum("hu,...uv->...hv", Fvi, Zr)
+    # x = Re( Y @ W^T ) = Yr @ Wr^T - Yi @ Wi^T
+    return jnp.einsum("...hv,wv->...hw", Yr, Wr) - jnp.einsum("...hv,wv->...hw", Yi, Wi)
+
+
+def num_freq(delta: int) -> int:
+    """Number of stored complex frequency points P in the rfft2 layout."""
+    return delta * (delta // 2 + 1)

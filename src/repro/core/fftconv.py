@@ -1,0 +1,185 @@
+"""FFT-based convolution (the paper's algorithm), single-device core.
+
+Four stages, kept as separate functions so the distributed schedules in
+``repro.parallel`` can place collectives *between* stages (nFFT) or inside
+stage 3 (the wFFT baseline):
+
+  1. ``input_transform``   I (B,C,H,W)      -> D (P, M, C)   [rfft2 of 16x16 tiles]
+  2. ``kernel_transform``  K (C',C,kh,kw)   -> G (P, C, C')  [conjugate rfft2]
+  3. ``cgemm``             Z[p] = D[p] @ G[p]                [hot stage]
+  4. ``output_inverse``    Z (P, M, C')     -> O (B,C',Ho,Wo) [irfft2 + crop]
+
+All complex tensors are (real, imag) pairs of float arrays. ``M = B*X*Delta``
+(tile count), ``P = delta*(delta//2+1)`` frequency points.
+
+Convolution here is ML cross-correlation; ``conv2d_direct`` is the oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conv_spec import ConvSpec
+from repro.core.dft import rfft2_tiles, irfft2_tiles
+from repro.core.cgemm import cgemm
+
+
+# --------------------------------------------------------------------------
+# Oracle
+# --------------------------------------------------------------------------
+
+def conv2d_direct(x, k, *, padding=0):
+    """Direct convolution oracle: lax.conv_general_dilated, NCHW/OIHW."""
+    pad = (padding, padding) if isinstance(padding, int) else padding
+    return jax.lax.conv_general_dilated(
+        x, k, window_strides=(1, 1),
+        padding=[pad, pad],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+# --------------------------------------------------------------------------
+# Stage 1: input transform
+# --------------------------------------------------------------------------
+
+def extract_tiles(x, spec: ConvSpec):
+    """(B, C, H, W) -> overlap-save patches (B, C, X, Delta, delta, delta)."""
+    d = spec.delta
+    x = jnp.pad(x, ((0, 0), (0, 0),
+                    (spec.pad_h, spec.Hp - spec.H - spec.pad_h),
+                    (spec.pad_w, spec.Wp - spec.W - spec.pad_w)))
+    h_idx = jnp.arange(spec.X)[:, None] * spec.t_h + jnp.arange(d)[None, :]
+    w_idx = jnp.arange(spec.D)[:, None] * spec.t_w + jnp.arange(d)[None, :]
+    patches = x[:, :, h_idx[:, :, None, None], w_idx[None, None, :, :]]
+    # (B, C, X, delta, Delta, delta) -> (B, C, X, Delta, delta, delta)
+    return patches.transpose(0, 1, 2, 4, 3, 5)
+
+
+def input_transform(x, spec: ConvSpec, *, dtype=jnp.float32):
+    """Stage 1: I -> D (P, M, C) as (real, imag)."""
+    patches = extract_tiles(x.astype(dtype), spec)
+    Tr, Ti = rfft2_tiles(patches, spec.delta)          # (B, C, X, Dl, d, dh)
+    def to_pmc(T):
+        T = T.transpose(4, 5, 0, 2, 3, 1)              # (d, dh, B, X, Dl, C)
+        return T.reshape(spec.P, spec.M, spec.C)
+    return to_pmc(Tr), to_pmc(Ti)
+
+
+# --------------------------------------------------------------------------
+# Stage 2: kernel transform
+# --------------------------------------------------------------------------
+
+def kernel_transform(k, spec: ConvSpec, *, dtype=jnp.float32):
+    """Stage 2: K -> G (P, C, C') as (real, imag); imag is conjugated."""
+    d = spec.delta
+    kp = jnp.pad(k.astype(dtype), ((0, 0), (0, 0),
+                                   (0, d - spec.kh), (0, d - spec.kw)))
+    Tr, Ti = rfft2_tiles(kp, d)                        # (C', C, d, dh)
+    def to_pcc(T):
+        return T.transpose(2, 3, 1, 0).reshape(spec.P, spec.C, spec.Cout)
+    return to_pcc(Tr), to_pcc(-Ti)                     # conj: F*(K)
+
+
+# --------------------------------------------------------------------------
+# Stage 4: inverse transform
+# --------------------------------------------------------------------------
+
+def output_inverse(Zr, Zi, spec: ConvSpec):
+    """Stage 4: Z (P, M, C') -> O (B, C', Ho, Wo)."""
+    d, dh = spec.delta, spec.delta_h
+    def from_pmc(Z):
+        Z = Z.reshape(d, dh, spec.B, spec.X, spec.D, spec.Cout)
+        return Z.transpose(2, 5, 3, 4, 0, 1)           # (B, C', X, Dl, d, dh)
+    y = irfft2_tiles(from_pmc(Zr), from_pmc(Zi), d)    # (B, C', X, Dl, d, d)
+    y = y[..., :spec.t_h, :spec.t_w]
+    y = y.transpose(0, 1, 2, 4, 3, 5).reshape(
+        spec.B, spec.Cout, spec.X * spec.t_h, spec.D * spec.t_w)
+    return y[:, :, :spec.Ho, :spec.Wo]
+
+
+# --------------------------------------------------------------------------
+# Full algorithm
+# --------------------------------------------------------------------------
+
+def make_spec(x_shape, k_shape, padding=0, delta=16) -> ConvSpec:
+    B, C, H, W = x_shape
+    Cout, C2, kh, kw = k_shape
+    if C != C2:
+        raise ValueError(f"channel mismatch: input C={C}, kernel C={C2}")
+    pad = (padding, padding) if isinstance(padding, int) else padding
+    return ConvSpec(B=B, C=C, Cout=Cout, H=H, W=W, kh=kh, kw=kw,
+                    pad_h=pad[0], pad_w=pad[1], delta=delta)
+
+
+def _fft_conv2d_impl(x, k, spec: ConvSpec, three_m: bool, cgemm_fn=None):
+    Dr, Di = input_transform(x, spec)
+    Gr, Gi = kernel_transform(k, spec)
+    mm = cgemm_fn if cgemm_fn is not None else functools.partial(
+        cgemm, three_m=three_m)
+    Zr, Zi = mm(Dr, Di, Gr, Gi)
+    return output_inverse(Zr, Zi, spec).astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _fft_conv2d(x, k, padding, delta, three_m):
+    spec = make_spec(x.shape, k.shape, padding, delta)
+    return _fft_conv2d_impl(x, k, spec, three_m)
+
+
+def _fft_conv2d_fwd(x, k, padding, delta, three_m):
+    return _fft_conv2d(x, k, padding, delta, three_m), (x, k)
+
+
+def _fft_conv2d_bwd(padding, delta, three_m, res, dy):
+    x, k = res
+    Cout, C, kh, kw = k.shape
+    pad = (padding, padding) if isinstance(padding, int) else padding
+    # dx: FFT-conv of dy against the spatially-flipped, channel-swapped kernel,
+    # "full" correlation cropped by the forward padding.
+    kt = jnp.flip(k, axis=(-2, -1)).transpose(1, 0, 2, 3)   # (C, C', kh, kw)
+    dx_full = _fft_conv2d(dy, kt, (kh - 1, kw - 1), delta, three_m)
+    H, W = x.shape[-2], x.shape[-1]
+    dx = jax.lax.dynamic_slice(
+        dx_full, (0, 0, pad[0], pad[1]), (x.shape[0], C, H, W))
+    # dk: correlation of x with dy, batch as the contraction axis. The "kernel"
+    # (dy) spatial extent exceeds the tile, so use the direct path (one call).
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad[0], pad[0]), (pad[1], pad[1])))
+    dk = jax.lax.conv_general_dilated(
+        xp.transpose(1, 0, 2, 3),                  # (C, B, Hp, Wp)
+        dy.transpose(1, 0, 2, 3),                  # (C', B, Ho, Wo)
+        window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    ).transpose(1, 0, 2, 3)                        # (C', C, kh, kw)
+    return dx.astype(x.dtype), dk.astype(k.dtype)
+
+
+_fft_conv2d.defvjp(_fft_conv2d_fwd, _fft_conv2d_bwd)
+
+
+def fft_conv2d(x, k, *, padding=0, delta=16, three_m: bool = True):
+    """FFT-based 2-D convolution (cross-correlation), differentiable.
+
+    Args:
+      x: input feature maps, (B, C, H, W).
+      k: kernels, (C', C, kh, kw) with kh, kw <= delta.
+      padding: int or (ph, pw) zero padding.
+      delta: FFT tile size (paper uses 16).
+      three_m: use the 3-matmul complex product (else 4M).
+    Returns:
+      (B, C', Ho, Wo) with Ho = H + 2*ph - kh + 1.
+    """
+    return _fft_conv2d(x, k, padding, delta, three_m)
+
+
+def fft_conv2d_pallas(x, k, *, padding=0, delta=16, three_m: bool = True,
+                      bm=None, bn=None, bk=None):
+    """fft_conv2d with the hot CGEMM running through the Pallas TPU kernel
+    (kernels/cgemm; interpret mode on CPU). Inference path — no custom VJP.
+    """
+    from repro.kernels.cgemm import cgemm_pallas
+    spec = make_spec(x.shape, k.shape, padding, delta)
+    mm = functools.partial(cgemm_pallas, three_m=three_m, bm=bm, bn=bn,
+                           bk=bk)
+    return _fft_conv2d_impl(x, k, spec, three_m, cgemm_fn=mm)

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (DataConfig, lm_batch, image_batch,
+                                 frames_batch)
+
+__all__ = ["DataConfig", "lm_batch", "image_batch", "frames_batch"]

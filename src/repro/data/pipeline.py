@@ -1,0 +1,63 @@
+"""Deterministic, stateless-seekable synthetic data pipeline.
+
+Every batch is a pure function of (seed, step), so restart-after-failure and
+straggler fail-over replay the *exact* same stream with no pipeline state to
+checkpoint — the fault-tolerance contract in DESIGN.md §5. Shardable: the
+batch is produced host-locally then device_put with the step's sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    kind: str = "lm"        # lm | images | frames
+
+
+def _rng(cfg: DataConfig, step: int):
+    return np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, step, 0xD47A]))
+
+
+def lm_batch(cfg: DataConfig, step: int):
+    """Zipf-ish synthetic token stream with a learnable structure: token
+    t+1 depends on t (bigram-ish), so small models show a falling loss."""
+    r = _rng(cfg, step)
+    B, S, V = cfg.global_batch, cfg.seq_len, cfg.vocab
+    base = r.zipf(1.3, size=(B, S)).clip(1, V - 1)
+    # inject copy structure: 25% of positions repeat the previous token
+    prev = np.roll(base, 1, axis=1)
+    m = r.random((B, S)) < 0.25
+    toks = np.where(m, prev, base).astype(np.int32)
+    return {"tokens": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:])}
+
+
+def image_batch(cfg: DataConfig, step: int, *, chw=(3, 32, 32), n_class=10):
+    r = _rng(cfg, step)
+    B = cfg.global_batch
+    y = r.integers(0, n_class, size=(B,))
+    x = r.standard_normal((B,) + chw).astype(np.float32)
+    # class-dependent mean so the task is learnable
+    x += y[:, None, None, None].astype(np.float32) * 0.3
+    return {"images": jnp.asarray(x), "labels": jnp.asarray(y, jnp.int32)}
+
+
+def frames_batch(cfg: DataConfig, step: int, *, d_model: int, frames: int):
+    """Whisper stub frontend: precomputed frame embeddings + text tokens."""
+    r = _rng(cfg, step)
+    B = cfg.global_batch
+    f = r.standard_normal((B, frames, d_model)).astype(np.float32)
+    toks = r.integers(1, cfg.vocab, size=(B, cfg.seq_len)).astype(np.int32)
+    return {"frames": jnp.asarray(f),
+            "tokens": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:])}

@@ -1,0 +1,4 @@
+from repro.kernels.cgemm.ops import cgemm_pallas
+from repro.kernels.cgemm.ref import cgemm_ref
+
+__all__ = ["cgemm_pallas", "cgemm_ref"]

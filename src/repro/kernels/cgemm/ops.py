@@ -1,0 +1,54 @@
+"""jit'd public wrapper for the Pallas batched complex GEMM.
+
+Pads (M, N, C) up to block multiples, invokes the kernel, slices back.
+On the CPU backend the kernel body runs in interpret mode (Python emulation)
+— TPU is the target, CPU validates correctness.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cgemm.kernel import cgemm_pallas_call
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def _default_blocks(M, N, C):
+    # MXU-aligned when the problem allows; clamp for small operands.
+    bm = min(128, M)
+    bn = min(128, N)
+    bk = min(128, C)
+    return bm, bn, bk
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "three_m",
+                                             "interpret"))
+def cgemm_pallas(Dr, Di, Gr, Gi, *, bm=None, bn=None, bk=None,
+                 three_m: bool = True, interpret: bool | None = None):
+    """Batched complex GEMM: (P,M,C) x (P,C,N) -> (P,M,N) (real, imag)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    P, M, C = Dr.shape
+    N = Gr.shape[-1]
+    dbm, dbn, dbk = _default_blocks(M, N, C)
+    bm, bn, bk = bm or dbm, bn or dbn, bk or dbk
+    Drp = _pad_to(_pad_to(Dr, 1, bm), 2, bk)
+    Dip = _pad_to(_pad_to(Di, 1, bm), 2, bk)
+    Grp = _pad_to(_pad_to(Gr, 1, bk), 2, bn)
+    Gip = _pad_to(_pad_to(Gi, 1, bk), 2, bn)
+    call = cgemm_pallas_call(P, Drp.shape[1], Grp.shape[2], Drp.shape[2],
+                             Dr.dtype, bm=bm, bn=bn, bk=bk,
+                             three_m=three_m, interpret=interpret)
+    Zr, Zi = call(Drp, Dip, Grp, Gip)
+    return Zr[:, :M, :N], Zi[:, :M, :N]

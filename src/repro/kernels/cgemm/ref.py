@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the batched complex GEMM kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def cgemm_ref(Dr, Di, Gr, Gi):
+    """Z[p] = D[p] @ G[p]; (P,M,C) x (P,C,N) -> (P,M,N) real/imag pair."""
+    ein = lambda a, b: jnp.einsum("pmc,pcn->pmn", a, b,
+                                  precision=jax.lax.Precision.HIGHEST)
+    return ein(Dr, Gr) - ein(Di, Gi), ein(Dr, Gi) + ein(Di, Gr)

@@ -1,0 +1,49 @@
+"""jit'd wrappers for the fused tile-DFT Pallas kernels."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dft import dft_mats
+from repro.kernels.dft_tile.kernel import tile_fft_call, tile_ifft_call
+
+
+def _pad_tiles(x, bt):
+    n = x.shape[0]
+    rem = (-n) % bt
+    if rem:
+        x = jnp.pad(x, ((0, rem),) + ((0, 0),) * (x.ndim - 1))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("delta", "bt", "interpret"))
+def tile_fft_pallas(x, *, delta: int = 16, bt: int = 256,
+                    interpret: bool | None = None):
+    """Forward DFT of tiles: (n, delta, delta) -> 2x (n, delta, dh)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    n = x.shape[0]
+    bt = min(bt, max(n, 1))
+    xp = _pad_tiles(x, bt)
+    Fr, Fi, Fhr, Fhi, *_ = dft_mats(delta)
+    call = tile_fft_call(xp.shape[0], delta, x.dtype, bt=bt,
+                         interpret=interpret)
+    Tr, Ti = call(xp, Fr, Fi, Fhr, Fhi)
+    return Tr[:n], Ti[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("delta", "bt", "interpret"))
+def tile_ifft_pallas(Zr, Zi, *, delta: int = 16, bt: int = 256,
+                     interpret: bool | None = None):
+    """Inverse DFT of tiles: 2x (n, delta, dh) -> (n, delta, delta)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    n = Zr.shape[0]
+    bt = min(bt, max(n, 1))
+    Zrp, Zip = _pad_tiles(Zr, bt), _pad_tiles(Zi, bt)
+    *_, Fvr, Fvi, Wr, Wi = dft_mats(delta)
+    call = tile_ifft_call(Zrp.shape[0], delta, Zr.dtype, bt=bt,
+                          interpret=interpret)
+    return call(Zrp, Zip, Fvr, Fvi, Wr, Wi)[:n]

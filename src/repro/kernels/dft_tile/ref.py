@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the tile DFT kernels."""
+from repro.core.dft import rfft2_tiles, irfft2_tiles
+
+
+def tile_fft_ref(x, delta):
+    """(n, delta, delta) -> (Tr, Ti): (n, delta, delta//2+1)."""
+    return rfft2_tiles(x, delta)
+
+
+def tile_ifft_ref(Zr, Zi, delta):
+    """(n, delta, delta//2+1) x2 -> (n, delta, delta)."""
+    return irfft2_tiles(Zr, Zi, delta)

@@ -1,0 +1,39 @@
+"""Production mesh builders. Functions, not module constants, so importing
+this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def _mk(shape, axes):
+    n = 1
+    for s in shape:
+        n *= s
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devs)} — the "
+            "dry-run entrypoint must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count before any "
+            "jax import")
+    return jax.make_mesh(
+        shape, axes, devices=devs[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model). Multi-pod: 2 pods =
+    512 chips (pod, data, model); ``pod`` x ``data`` is the DP domain."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_host_mesh(n_data: int, n_model: int):
+    """Small mesh over host (CPU) devices for tests/benchmarks."""
+    return _mk((n_data, n_model), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """Data-parallel axes of a mesh (pod included when present)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,220 @@
+"""Sharding rules: param / optimizer / batch / cache PartitionSpecs.
+
+TP ("model" axis) placement is rule-based on the parameter's leaf name, with
+divisibility guards (a dim that doesn't divide the axis is replicated).
+FSDP (ZeRO-3 via GSPMD): optionally shard the largest remaining dim of every
+large leaf over "data"; XLA inserts the all-gathers. Train steps use
+params+opt FSDP; serve steps shard params over "model" only (bf16).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+from repro.models.common import ModelConfig, ShapeCell
+
+# leaf-name -> preferred model-sharded axis, counted from the END of shape
+_MODEL_AXIS_RULES = {
+    "embed": -2, "lm_head": -1,
+    "wq": -2, "w_q": -2, "wo": -3,
+    "w_uk": -2, "w_uv": -2, "w_dkv": -1,
+    "w_gate": -1, "w_up": -1, "w_down": -2,
+    "w1": -1, "w2": -1, "w3": -2,
+    "w_z": -1, "w_x": -1, "w_out": -2, "w_dt": -1,
+    "conv_x": -1, "out_norm": -1,
+}
+_REPLICATED = {"w_kr", "w_gate_router", "w_B", "w_C", "conv_B", "conv_C",
+               "A_log", "D", "dt_bias", "gamma", "beta", "q_norm", "k_norm",
+               "meta_tokens", "dec_posemb", "attn_norm", "mamba_norm",
+               "step"}
+_FSDP_MIN_SIZE = 1 << 16
+
+
+def _leaf_name(path):
+    last = path[-1]
+    return str(getattr(last, "key", getattr(last, "idx", last)))
+
+
+def _leaf_spec(name, shape, cfg: ModelConfig, n_model: int, n_data: int,
+               model_axis: str, fsdp: bool):
+    ndim = len(shape)
+    axes = [None] * ndim
+    if name in ("wk", "wv"):
+        # GQA: shard kv heads only when they divide the axis. NEVER shard
+        # head_dim — that would turn every score einsum into a psum.
+        if shape[-2] % n_model == 0:
+            axes[-2] = model_axis
+    elif name in ("wq", "w_q", "wo", "w_uk", "w_uv"):
+        # head-TP only when the (padded) head count divides the axis
+        ax = _MODEL_AXIS_RULES[name]
+        if shape[ax] % n_model == 0:
+            axes[ax] = model_axis
+    elif name in _MODEL_AXIS_RULES and name not in _REPLICATED:
+        ax = _MODEL_AXIS_RULES[name]
+        if ndim >= -ax and shape[ax] % n_model == 0:
+            axes[ax] = model_axis
+    if fsdp:
+        size = 1
+        for s in shape:
+            size *= s
+        if size >= _FSDP_MIN_SIZE:
+            # largest unassigned dim divisible by the data axis
+            cands = [(shape[i], i) for i in range(ndim)
+                     if axes[i] is None and shape[i] % n_data == 0]
+            if cands:
+                _, i = max(cands)
+                axes[i] = "data"
+    return P(*axes)
+
+
+def param_specs(cfg: ModelConfig, params_struct, mesh, *, fsdp: bool):
+    n_model = mesh.shape["model"]
+    n_data = mesh.shape["data"]
+
+    def spec_of(path, leaf):
+        name = _leaf_name(path)
+        if name in _REPLICATED:
+            return P()
+        return _leaf_spec(name, leaf.shape, cfg, n_model, n_data, "model",
+                          fsdp)
+
+    return jax.tree_util.tree_map_with_path(spec_of, params_struct)
+
+
+def opt_specs(pspecs):
+    """Optimizer state mirrors the parameter sharding (mu/nu)."""
+    return {"mu": pspecs, "nu": pspecs, "step": P()}
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell, mesh):
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp = dp if cell.global_batch % _axes_size(mesh, dp) == 0 else ()
+    dp_spec = dp if dp else None
+    if cell.kind == "train":
+        if cfg.encdec:
+            return {"frames": P(dp_spec, None, None),
+                    "tokens": P(dp_spec, None), "labels": P(dp_spec, None)}
+        out = {"tokens": P(dp_spec, None), "labels": P(dp_spec, None)}
+        if cfg.frontend == "vision_stub":
+            out["img_embeds"] = P(dp_spec, None, None)
+        return out
+    if cell.kind == "prefill":
+        if cfg.encdec:
+            return {"frames": P(dp_spec, None, None),
+                    "tokens": P(dp_spec, None)}
+        out = {"tokens": P(dp_spec, None)}
+        if cfg.frontend == "vision_stub":
+            out["img_embeds"] = P(dp_spec, None, None)
+        return out
+    return {"tokens": P(dp_spec, None)}          # decode
+
+
+def _axes_size(mesh, axes):
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def cache_specs(cfg: ModelConfig, cell: ShapeCell, mesh):
+    """PartitionSpecs matching the init_cache / init_dec_cache pytree.
+    Per-unit-position entries can have different sequence extents (ring
+    caches), so divisibility checks use each entry's own length."""
+    n_model = mesh.shape["model"]
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    b_ok = cell.global_batch % _axes_size(mesh, dp) == 0
+    b_spec = dp if b_ok else None
+
+    def _seq_spec(seq_len):
+        # long-context (tiny batch): shard the seq dim over the DP domain
+        return dp if (not b_ok and seq_len % _axes_size(mesh, dp) == 0) \
+            else None
+
+    def attn_kv(lead, seq_len):
+        # kv heads on "model" when they divide; otherwise put "model" on the
+        # sequence dim (flash-decoding-style KV sequence sharding). Never on
+        # head_dim (that would psum every score einsum).
+        seq_spec = _seq_spec(seq_len)
+        if cfg.padded_kv % n_model == 0:
+            h_ax, s_ax = "model", seq_spec
+        else:
+            h_ax = None
+            s_ax = (seq_spec + ("model",) if seq_spec
+                    else "model") if seq_len % n_model == 0 else seq_spec
+        return P(*lead, b_spec, h_ax, s_ax, None)
+
+    def kind_specs(kind, lead, seq_len):
+        seq_spec = _seq_spec(seq_len)
+        c = {}
+        if kind in ("G", "L", "H"):
+            if cfg.mla:
+                # HILLCLIMB (deepseek decode_32k, EXPERIMENTS §Perf): latent-
+                # sharded c_kv makes every score einsum psum a (B,H,S) tensor
+                # (453 MB/step). Sharding the SEQ dim instead (flash-decoding
+                # style) keeps scores local; only the tiny softmax stats and
+                # the (B,H,lora) output psum cross chips.
+                if seq_len % n_model == 0:
+                    s_ax = (seq_spec + ("model",)) if seq_spec else "model"
+                    c["c_kv"] = P(*lead, b_spec, s_ax, None)
+                    c["k_rope"] = P(*lead, b_spec, s_ax, None)
+                else:
+                    l_ax = "model" if cfg.kv_lora % n_model == 0 else None
+                    c["c_kv"] = P(*lead, b_spec, seq_spec, l_ax)
+                    c["k_rope"] = P(*lead, b_spec, seq_spec, None)
+            else:
+                c["k"] = attn_kv(lead, seq_len)
+                c["v"] = attn_kv(lead, seq_len)
+        if kind in ("M", "H"):
+            if cfg.ssm_heads % n_model == 0:
+                h_ax, p_ax = "model", None
+            elif cfg.ssm_head_dim % n_model == 0:
+                h_ax, p_ax = None, "model"
+            else:
+                h_ax = p_ax = None
+            c["ssm"] = P(*lead, b_spec, h_ax, p_ax, None)
+            di_ax = "model" if cfg.d_inner % n_model == 0 else None
+            c["conv_x"] = P(*lead, b_spec, None, di_ax)
+            c["conv_B"] = P(*lead, b_spec, None, None)
+            c["conv_C"] = P(*lead, b_spec, None, None)
+        return c
+
+    if cfg.encdec:
+        enc_seq = _seq_spec(cell.seq_len)
+        if cfg.padded_kv % n_model == 0:      # head-padded MHA: head-TP
+            kv = P(None, b_spec, "model", None, None)
+            return {"k": kv, "v": kv,
+                    "xk": P(None, b_spec, "model", enc_seq, None),
+                    "xv": P(None, b_spec, "model", enc_seq, None)}
+        self_s = "model" if cfg.max_dec_len % n_model == 0 else None
+        if cell.seq_len % n_model == 0:
+            x_s = (enc_seq + ("model",)) if enc_seq else "model"
+        else:
+            x_s = enc_seq
+        kv = P(None, b_spec, None, self_s, None)
+        return {"k": kv, "v": kv,
+                "xk": P(None, b_spec, None, x_s, None),
+                "xv": P(None, b_spec, None, x_s, None)}
+
+    unit = cfg.layer_pattern
+    locs = cfg.local_flags()[cfg.first_dense:]
+    n_units = (cfg.n_layers - cfg.first_dense) // len(unit)
+    uniform = all(locs[u * len(unit) + j] == locs[j]
+                  for u in range(n_units) for j in range(len(unit)))
+    base_len = cell.seq_len + (cfg.n_meta_tokens
+                               if cell.kind == "prefill" else 0)
+    out = {}
+    for j, kind in enumerate(unit):
+        ring = (cfg.ring_local_cache and uniform and locs[j]
+                and cfg.window > 0)
+        len_j = min(base_len, cfg.window) if ring else base_len
+        out[f"u{j}"] = kind_specs(kind, (None,), len_j)
+    kinds = cfg.layer_kinds()
+    for i in range(cfg.first_dense):
+        out[f"dense_{i}"] = kind_specs(kinds[i], (), base_len)
+    return out
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

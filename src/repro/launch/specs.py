@@ -1,0 +1,76 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run: weak-type
+correct, shardable, zero allocation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, ShapeCell
+from repro.models import lm as LM
+from repro.models import whisper as WH
+from repro.optim import adamw_init
+
+
+def _sd(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell):
+    """Batch stand-ins for one (arch x shape) cell.
+
+    train: {tokens, labels} (+ img_embeds for vlm; frames for audio — the
+    modality frontend is a stub, so the spec IS the precomputed embedding).
+    prefill: {tokens} (+ stubs); decode: {tokens} of (B, 1).
+    VLM image tokens count against the context budget (tokens = S - 576);
+    hymba's 128 meta tokens are architectural overhead on top of S.
+    """
+    B, S = cell.global_batch, cell.seq_len
+    i32, f32 = jnp.int32, jnp.float32
+    if cfg.encdec:
+        # seq_len scales the encoder (frame count); decoder is max_dec_len.
+        if cell.kind == "train":
+            return {"frames": _sd((B, S, cfg.d_model), f32),
+                    "tokens": _sd((B, cfg.max_dec_len), i32),
+                    "labels": _sd((B, cfg.max_dec_len), i32)}
+        if cell.kind == "prefill":
+            return {"frames": _sd((B, S, cfg.d_model), f32),
+                    "tokens": _sd((B, 1), i32)}
+        return {"tokens": _sd((B, 1), i32)}
+
+    n_img = cfg.n_frontend_tokens if cfg.frontend == "vision_stub" else 0
+    if cell.kind == "train":
+        out = {"tokens": _sd((B, S - n_img), i32),
+               "labels": _sd((B, S - n_img), i32)}
+    elif cell.kind == "prefill":
+        out = {"tokens": _sd((B, S - n_img), i32)}
+    else:
+        return {"tokens": _sd((B, 1), i32)}
+    if n_img:
+        out["img_embeds"] = _sd((B, n_img, cfg.d_model), f32)
+    return out
+
+
+def param_structs(cfg: ModelConfig, *, bf16: bool = False):
+    init = WH.init_whisper_params if cfg.encdec else LM.init_lm_params
+    structs = jax.eval_shape(lambda k: init(cfg, k),
+                             jax.ShapeDtypeStruct((2,), jnp.uint32))
+    if bf16:
+        structs = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+            structs)
+    return structs
+
+
+def opt_structs(params_struct):
+    return jax.eval_shape(adamw_init, params_struct)
+
+
+def cache_structs(cfg: ModelConfig, cell: ShapeCell):
+    B, S = cell.global_batch, cell.seq_len
+    if cfg.encdec:
+        return jax.eval_shape(
+            lambda: WH.init_dec_cache(cfg, B, S))
+    if cell.kind == "prefill":
+        S += cfg.n_meta_tokens          # hymba meta tokens are cached too
+    return jax.eval_shape(lambda: LM.init_cache(cfg, B, S))

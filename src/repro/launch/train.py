@@ -1,0 +1,120 @@
+"""Training launcher (CPU-runnable; same code path the dry-run lowers).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b --smoke \
+        --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+Features exercised here: deterministic seekable data, AdamW + cosine,
+microbatching, async atomic checkpoints, crash-resume (--resume), and a
+straggler watchdog (per-step wall-time EWMA; steps slower than
+``--straggler-factor`` x the EWMA are logged — on a real cluster this signal
+feeds the failover controller that re-queues the step's data shard, which is
+replayable because batches are pure functions of the step index)."""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.data import DataConfig, lm_batch, frames_batch
+from repro.optim import AdamWConfig
+from repro.train import make_train_step, init_train_state
+import repro.checkpoint as ckpt
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, default="qwen3-14b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--straggler-factor", type=float, default=3.0)
+    # size overrides (e.g. the ~100M end-to-end training run)
+    ap.add_argument("--d-model", type=int, default=0)
+    ap.add_argument("--n-layers", type=int, default=0)
+    ap.add_argument("--n-heads", type=int, default=0)
+    ap.add_argument("--n-kv", type=int, default=0)
+    ap.add_argument("--d-ff", type=int, default=0)
+    ap.add_argument("--vocab", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    over = {}
+    if args.d_model:
+        over.update(d_model=args.d_model,
+                    head_dim=args.d_model // (args.n_heads or cfg.n_heads))
+    if args.n_layers:
+        over["n_layers"] = args.n_layers
+    if args.n_heads:
+        over.update(n_heads=args.n_heads, pad_heads=0, pad_kv=0)
+    if args.n_kv:
+        over["n_kv"] = args.n_kv
+    if args.d_ff:
+        over["d_ff"] = args.d_ff
+    if args.vocab:
+        over["vocab"] = args.vocab
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, moe_groups=1)
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
+                          total_steps=args.steps)
+    params, opt = init_train_state(cfg, jax.random.PRNGKey(args.seed))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"steps={args.steps} batch={args.batch} seq={args.seq}")
+
+    start_step = 0
+    if args.resume and args.ckpt_dir:
+        last = ckpt.latest_step(args.ckpt_dir)
+        if last is not None:
+            (state, meta) = ckpt.restore(args.ckpt_dir, last,
+                                         {"params": params, "opt": opt})
+            params, opt = state["params"], state["opt"]
+            start_step = last
+            print(f"resumed from step {last}")
+
+    dc = DataConfig(vocab=cfg.vocab, seq_len=args.seq + 1,
+                    global_batch=args.batch, seed=args.seed)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg,
+                                      microbatches=args.microbatches))
+
+    ewma = None
+    for step in range(start_step, args.steps):
+        if cfg.encdec:
+            batch = frames_batch(dc, step, d_model=cfg.d_model, frames=64)
+            batch["tokens"] = batch["tokens"][:, :cfg.max_dec_len]
+            batch["labels"] = batch["labels"][:, :cfg.max_dec_len]
+        else:
+            batch = lm_batch(dc, step)
+        t0 = time.time()
+        params, opt, m = step_fn(params, opt, batch)
+        loss = float(m["loss"])
+        dt = time.time() - t0
+        ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+        straggler = " [STRAGGLER]" if dt > args.straggler_factor * ewma \
+            and step > start_step + 3 else ""
+        if step % 10 == 0 or step == args.steps - 1 or straggler:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"lr {float(m['lr']):.2e} {dt*1e3:.0f}ms{straggler}")
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            ckpt.save_async(args.ckpt_dir, step + 1,
+                            {"params": params, "opt": opt})
+    ckpt.wait_pending()
+    print("done; final loss", loss)
+    return loss
+
+
+if __name__ == "__main__":
+    main()

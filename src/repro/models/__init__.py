@@ -1,0 +1,4 @@
+from repro.models.common import ModelConfig, ShapeCell, SHAPES
+from repro.models import layers, lm, whisper
+
+__all__ = ["ModelConfig", "ShapeCell", "SHAPES", "layers", "lm", "whisper"]

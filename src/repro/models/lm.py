@@ -1,0 +1,371 @@
+"""Decoder-only LM covering dense / moe / ssm / hybrid / vlm families.
+
+Layers are weight-stacked and scanned over *pattern units*: the repeating
+block of the architecture's layer pattern (gemma3: 5 local + 1 global;
+gemma2: local+global; mixtral/mamba2/hymba: a single layer). Kinds and
+local/global choices inside a unit are therefore *static*, so the banded
+sliding-window fast path stays available, while the HLO size is
+O(pattern-unit), independent of depth. DeepSeek's leading dense layer(s)
+sit outside the scanned MoE stack.
+
+Hymba's three forced-global layers (first/middle/last of a uniform 'H'
+pattern) cannot be static under the unit scan; they use a traced effective
+window (HUGE for global) instead.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models import layers as L
+from repro.parallel.act_sharding import constrain, current_mesh
+
+HUGE_WINDOW = 1 << 30
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+
+def _make_block_params(key, cfg: ModelConfig, kind: str, moe: bool):
+    ks = L.split_keys(key, 8)
+    p = {"ln1": L.make_norm_params(ks[0], cfg.d_model, cfg.norm)}
+    if kind in ("G", "L", "H"):
+        p["attn"] = (L.make_mla_params(ks[1], cfg) if cfg.mla
+                     else L.make_attn_params(ks[1], cfg))
+    if kind in ("M", "H"):
+        p["mamba"] = L.make_mamba_params(ks[2], cfg)
+        if kind == "H":
+            p["attn_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+            p["mamba_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    if kind != "M" and cfg.d_ff:
+        p["ln2"] = L.make_norm_params(ks[3], cfg.d_model, cfg.norm)
+        p["ffn"] = (L.make_moe_params(ks[4], cfg) if moe
+                    else L.make_mlp_params(ks[4], cfg.d_model, cfg.d_ff,
+                                           cfg.mlp))
+    if cfg.post_norm:
+        p["pn1"] = L.make_norm_params(ks[5], cfg.d_model, cfg.norm)
+        if "ffn" in p:
+            p["pn2"] = L.make_norm_params(ks[6], cfg.d_model, cfg.norm)
+    return p
+
+
+def _scan_geometry(cfg: ModelConfig):
+    """(unit_kinds, n_units) for the scanned part of the stack."""
+    unit = cfg.layer_pattern
+    n_scan = cfg.n_layers - cfg.first_dense
+    assert n_scan % len(unit) == 0, (cfg.name, n_scan, unit)
+    return unit, n_scan // len(unit)
+
+
+def init_lm_params(cfg: ModelConfig, key):
+    ks = L.split_keys(key, 6)
+    unit, n_units = _scan_geometry(cfg)
+    moe = cfg.n_experts > 0
+    kinds = cfg.layer_kinds()
+
+    def unit_params(k):
+        uks = L.split_keys(k, len(unit))
+        return [_make_block_params(uks[j], cfg, unit[j], moe)
+                for j in range(len(unit))]
+
+    unit_keys = jax.random.split(ks[0], n_units)
+    stack = jax.vmap(unit_params)(unit_keys)     # list of (n_units, ...) trees
+    params = {
+        "embed": L.dense_init(ks[1], (cfg.vocab, cfg.d_model)),
+        "final_norm": L.make_norm_params(ks[2], cfg.d_model, cfg.norm),
+        "layers": stack,
+    }
+    for i in range(cfg.first_dense):
+        params[f"dense_{i}"] = _make_block_params(
+            jax.random.fold_in(ks[3], i), cfg, kinds[i], False)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[4], (cfg.d_model, cfg.vocab))
+    if cfg.n_meta_tokens:
+        params["meta_tokens"] = L.dense_init(
+            ks[5], (cfg.n_meta_tokens, cfg.d_model))
+    return params
+
+
+# --------------------------------------------------------------------------
+# per-layer scan data (traced where the pattern can't make them static)
+# --------------------------------------------------------------------------
+
+def _unit_flags(cfg: ModelConfig):
+    """Static per-unit-position locality when uniform across units, else
+    traced per-layer effective windows (hymba's forced-global layers)."""
+    unit, n_units = _scan_geometry(cfg)
+    locs = cfg.local_flags()[cfg.first_dense:]
+    theta_local = cfg.rope_theta_local or cfg.rope_theta
+    thetas = jnp.asarray([theta_local if lc else cfg.rope_theta
+                          for lc in locs], jnp.float32)
+    thetas = thetas.reshape(n_units, len(unit))
+    uniform = all(locs[u * len(unit) + j] == locs[j]
+                  for u in range(n_units) for j in range(len(unit)))
+    if uniform:
+        static_local = [locs[j] for j in range(len(unit))]
+        wins = jnp.zeros((n_units, len(unit)), jnp.int32)   # unused
+    else:
+        static_local = [None] * len(unit)     # decide per layer at runtime
+        wins = jnp.asarray([cfg.window if lc else HUGE_WINDOW
+                            for lc in locs],
+                           jnp.int32).reshape(n_units, len(unit))
+    return static_local, thetas, wins
+
+
+# --------------------------------------------------------------------------
+# block forward
+# --------------------------------------------------------------------------
+
+def _block_forward(p, x, cfg: ModelConfig, kind: str, *, positions,
+                   window, theta, cache=None, cache_index=None,
+                   use_flash=False, ring=False):
+    """window: 0 (global), static int (banded local), or traced scalar.
+    ring: the attention cache is a window-sized ring buffer."""
+    h = L.apply_norm(x, p["ln1"], cfg.norm)
+    new_cache = {}
+    if kind in ("G", "L"):
+        if cfg.mla:
+            att, nc = L.mla_forward(p["attn"], h, cfg, positions=positions,
+                                    theta=theta, cache=cache,
+                                    cache_index=cache_index,
+                                    use_flash=use_flash)
+        else:
+            att, nc = L.attn_forward(p["attn"], h, cfg, positions=positions,
+                                     window=window, theta=theta,
+                                     cache=cache, cache_index=cache_index,
+                                     use_flash=use_flash, ring=ring)
+        if nc is not None:
+            new_cache.update(nc)
+        if cfg.post_norm:
+            att = L.apply_norm(att, p["pn1"], cfg.norm)
+        x = x + att
+    elif kind == "M":
+        mo, ns = L.mamba_forward(p["mamba"], h, cfg, state=cache)
+        if ns is not None:
+            new_cache.update(ns)
+        x = x + mo
+    elif kind == "H":
+        attn_cache = ssm_cache = None
+        if cache is not None:
+            attn_cache = {"k": cache["k"], "v": cache["v"]}
+            ssm_cache = {k: cache[k] for k in
+                         ("ssm", "conv_x", "conv_B", "conv_C")}
+        att, nc = L.attn_forward(p["attn"], h, cfg, positions=positions,
+                                 window=window, theta=theta,
+                                 cache=attn_cache, cache_index=cache_index,
+                                 use_flash=use_flash)
+        mo, ns = L.mamba_forward(p["mamba"], h, cfg, state=ssm_cache)
+        comb = 0.5 * (L.rms_norm(att, p["attn_norm"])
+                      + L.rms_norm(mo, p["mamba_norm"]))
+        if nc is not None:
+            new_cache.update(nc)
+        if ns is not None:
+            new_cache.update(ns)
+        x = x + comb
+    if kind != "M" and cfg.d_ff:
+        h2 = L.apply_norm(x, p["ln2"], cfg.norm)
+        if "w_gate_router" in p.get("ffn", {}):
+            mesh = current_mesh() if cfg.moe_ep else None
+            if mesh is not None and \
+                    cfg.n_experts % mesh.shape["model"] == 0:
+                from repro.parallel.ep_moe import moe_forward_ep
+                f = moe_forward_ep(p["ffn"], h2, cfg, mesh)
+            else:
+                f = L.moe_forward(p["ffn"], h2, cfg)
+        else:
+            f = L.mlp_forward(p["ffn"], h2, cfg.mlp)
+        if cfg.post_norm:
+            f = L.apply_norm(f, p["pn2"], cfg.norm)
+        x = x + f
+    return x, (new_cache or None)
+
+
+# --------------------------------------------------------------------------
+# unit scan (shared by train / prefill / decode)
+# --------------------------------------------------------------------------
+
+def _tree_index(tree, j):
+    return jax.tree.map(lambda a: a[j], tree)
+
+
+def _run_stack(params, cfg: ModelConfig, x, positions, *, cache=None,
+               cache_index=None, use_flash=False, remat=False):
+    """Run dense prefix + scanned units. cache is the per-unit-position dict
+    from init_cache ({"u{j}": (n_units, ...) stacks}); position stacks ride
+    along as scan xs, so per-position shapes (ring vs full) are fine.
+    Returns (x, new_cache_dict)."""
+    unit, n_units = _scan_geometry(cfg)
+    static_local, thetas, wins = _unit_flags(cfg)
+    layers_u = params["layers"]          # list-of-unit trees, stacked
+
+    cache_tup = None if cache is None else tuple(
+        cache[f"u{j}"] for j in range(len(unit)))
+
+    def unit_body(x, xs):
+        if cache_tup is None:
+            p_unit, theta_u, win_u = xs
+            c_tup = None
+        else:
+            p_unit, c_tup, theta_u, win_u = xs
+        ncs = []
+        for j, kind in enumerate(unit):
+            if static_local[j] is None:
+                window = win_u[j]                       # traced (hymba)
+            else:
+                window = cfg.window if static_local[j] else 0
+            ring = (cfg.ring_local_cache and static_local[j] is True
+                    and cfg.window > 0)
+            c_j = None if c_tup is None else c_tup[j]
+            x, nc = _block_forward(
+                p_unit[j], x, cfg, kind, positions=positions, window=window,
+                theta=theta_u[j], cache=c_j, cache_index=cache_index,
+                use_flash=use_flash, ring=ring)
+            x = constrain(x, "seq")
+            ncs.append(nc)
+        if cache_tup is None:
+            return x, None
+        return x, tuple(ncs)
+
+    body = unit_body
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    xs = ((layers_u, thetas, wins) if cache_tup is None
+          else (layers_u, cache_tup, thetas, wins))
+    x, new_cache_tup = jax.lax.scan(body, x, xs)
+    if cache_tup is None:
+        return x, None
+    return x, {f"u{j}": new_cache_tup[j] for j in range(len(unit))}
+
+
+# --------------------------------------------------------------------------
+# embeddings / logits
+# --------------------------------------------------------------------------
+
+def _embed(params, cfg: ModelConfig, tokens, img_embeds=None,
+           prepend_meta=False):
+    cdt = jnp.dtype(cfg.dtype)
+    x = params["embed"][tokens].astype(cdt)
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(float(cfg.d_model)).astype(cdt)
+    if img_embeds is not None:
+        x = jnp.concatenate([img_embeds.astype(cdt), x], axis=1)
+    if prepend_meta and cfg.n_meta_tokens:
+        meta = jnp.broadcast_to(
+            params["meta_tokens"].astype(cdt)[None],
+            (x.shape[0], cfg.n_meta_tokens, cfg.d_model))
+        x = jnp.concatenate([meta, x], axis=1)
+    return constrain(x, "seq")
+
+
+def _logits(params, cfg: ModelConfig, x):
+    x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    w = (params["embed"].T if cfg.tie_embeddings
+         else params["lm_head"]).astype(x.dtype)
+    logits = constrain((x @ w).astype(jnp.float32), "logits")
+    if cfg.softcap_final:
+        logits = jnp.tanh(logits / cfg.softcap_final) * cfg.softcap_final
+    return logits
+
+
+def _dense_prefix(params, cfg, x, positions, cache, cache_index, use_flash):
+    new_cache = {}
+    kinds = cfg.layer_kinds()
+    for i in range(cfg.first_dense):
+        c = None if cache is None else cache[f"dense_{i}"]
+        x, nc = _block_forward(params[f"dense_{i}"], x, cfg, kinds[i],
+                               positions=positions, window=0,
+                               theta=cfg.rope_theta, cache=c,
+                               cache_index=cache_index, use_flash=use_flash)
+        new_cache[f"dense_{i}"] = nc
+    return x, new_cache
+
+
+# --------------------------------------------------------------------------
+# public entry points
+# --------------------------------------------------------------------------
+
+def lm_forward(params, cfg: ModelConfig, tokens, *, img_embeds=None,
+               use_flash=False, remat=True):
+    """Training/scoring forward: (B, S) tokens -> (B, S_total, vocab)."""
+    x = _embed(params, cfg, tokens, img_embeds, prepend_meta=True)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x, _ = _dense_prefix(params, cfg, x, positions, None, None, use_flash)
+    x, _ = _run_stack(params, cfg, x, positions, use_flash=use_flash,
+                      remat=remat)
+    return _logits(params, cfg, x)
+
+
+# ---- KV cache --------------------------------------------------------------
+
+def _kind_cache(cfg: ModelConfig, kind: str, lead, batch: int, max_len: int):
+    cdt = jnp.dtype(cfg.dtype)
+    c = {}
+    if kind in ("G", "L", "H"):
+        if cfg.mla:
+            c["c_kv"] = jnp.zeros(lead + (batch, max_len, cfg.kv_lora), cdt)
+            c["k_rope"] = jnp.zeros(lead + (batch, max_len, cfg.rope_dim),
+                                    cdt)
+        else:
+            kv = lead + (batch, cfg.padded_kv, max_len, cfg.head_dim)
+            c["k"] = jnp.zeros(kv, cdt)
+            c["v"] = jnp.zeros(kv, cdt)
+    if kind in ("M", "H"):
+        W = cfg.conv_width
+        c["ssm"] = jnp.zeros(lead + (batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                                     cfg.ssm_state), jnp.float32)
+        c["conv_x"] = jnp.zeros(lead + (batch, W - 1, cfg.d_inner), cdt)
+        c["conv_B"] = jnp.zeros(lead + (batch, W - 1, cfg.ssm_state), cdt)
+        c["conv_C"] = jnp.zeros(lead + (batch, W - 1, cfg.ssm_state), cdt)
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Decode cache: one stacked (n_units, ...) entry per pattern-unit
+    position (so per-position lengths can differ: with ``ring_local_cache``
+    sliding-window layers allocate only a window-sized ring) plus one entry
+    per leading dense layer."""
+    unit, n_units = _scan_geometry(cfg)
+    static_local, _, _ = _unit_flags(cfg)
+    kinds = cfg.layer_kinds()
+    cache = {}
+    for j, kind in enumerate(unit):
+        ring = (cfg.ring_local_cache and static_local[j] is True
+                and cfg.window > 0)
+        len_j = min(max_len, cfg.window) if ring else max_len
+        cache[f"u{j}"] = _kind_cache(cfg, kind, (n_units,), batch, len_j)
+    for i in range(cfg.first_dense):
+        cache[f"dense_{i}"] = _kind_cache(cfg, kinds[i], (), batch, max_len)
+    return cache
+
+
+def lm_prefill(params, cfg: ModelConfig, tokens, cache, *, img_embeds=None,
+               use_flash=True):
+    """Prefill: run the full sequence, fill cache at offset 0.
+    Returns (last-token logits, new_cache, seq_len_written)."""
+    x = _embed(params, cfg, tokens, img_embeds, prepend_meta=True)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x, new_cache = _dense_prefix(params, cfg, x, positions, cache,
+                                 jnp.int32(0), use_flash)
+    x, sc = _run_stack(params, cfg, x, positions, cache=cache,
+                       cache_index=jnp.int32(0), use_flash=use_flash)
+    new_cache.update(sc)
+    return _logits(params, cfg, x[:, -1:]), new_cache, S
+
+
+def lm_decode_step(params, cfg: ModelConfig, tokens, pos, cache):
+    """One decode step. tokens: (B, 1); pos: scalar int32 write index.
+    Returns (logits, new_cache)."""
+    x = _embed(params, cfg, tokens)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(pos + jnp.arange(S)[None], (B, S))
+    x, new_cache = _dense_prefix(params, cfg, x, positions, cache, pos,
+                                 False)
+    x, sc = _run_stack(params, cfg, x, positions, cache=cache,
+                       cache_index=pos)
+    new_cache.update(sc)
+    return _logits(params, cfg, x), new_cache

@@ -1,0 +1,206 @@
+"""Whisper-style encoder-decoder (audio backbone; conv frontend is a stub —
+``input_specs`` feeds precomputed frame embeddings, per the assignment).
+
+Encoder: bidirectional attention over frames + sinusoidal positions.
+Decoder: causal self-attention + cross-attention, learned positions.
+Both stacks are weight-stacked and scanned.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models import layers as L
+from repro.parallel.act_sharding import constrain
+
+
+def sinusoid_posemb(length: int, d: int):
+    pos = np.arange(length)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * dim / d))
+    return jnp.asarray(np.concatenate([np.sin(ang), np.cos(ang)], axis=-1),
+                       jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+
+def _enc_layer(key, cfg):
+    ks = L.split_keys(key, 4)
+    return {"ln1": L.make_norm_params(ks[0], cfg.d_model, cfg.norm),
+            "attn": L.make_attn_params(ks[1], cfg),
+            "ln2": L.make_norm_params(ks[2], cfg.d_model, cfg.norm),
+            "mlp": L.make_mlp_params(ks[3], cfg.d_model, cfg.d_ff, cfg.mlp)}
+
+
+def _dec_layer(key, cfg):
+    ks = L.split_keys(key, 6)
+    return {"ln1": L.make_norm_params(ks[0], cfg.d_model, cfg.norm),
+            "attn": L.make_attn_params(ks[1], cfg),
+            "lnx": L.make_norm_params(ks[2], cfg.d_model, cfg.norm),
+            "xattn": L.make_attn_params(ks[3], cfg),
+            "ln2": L.make_norm_params(ks[4], cfg.d_model, cfg.norm),
+            "mlp": L.make_mlp_params(ks[5], cfg.d_model, cfg.d_ff, cfg.mlp)}
+
+
+def init_whisper_params(cfg: ModelConfig, key):
+    ks = L.split_keys(key, 5)
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "enc_layers": jax.vmap(lambda k: _enc_layer(k, cfg))(enc_keys),
+        "enc_norm": L.make_norm_params(ks[2], cfg.d_model, cfg.norm),
+        "dec_layers": jax.vmap(lambda k: _dec_layer(k, cfg))(dec_keys),
+        "dec_norm": L.make_norm_params(ks[3], cfg.d_model, cfg.norm),
+        "embed": L.dense_init(ks[4], (cfg.vocab, cfg.d_model)),
+        "dec_posemb": L.dense_init(ks[4], (cfg.max_dec_len, cfg.d_model)),
+    }
+
+
+# --------------------------------------------------------------------------
+# attention helpers (no RoPE; absolute position embeddings)
+# --------------------------------------------------------------------------
+
+def _proj_qkv(p, xq, xkv, cfg):
+    cdt = xq.dtype
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"].astype(cdt))
+    # whisper is MHA (n_kv == n_heads): no expansion needed
+    return (q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3))
+
+
+def _attend(p, q, k, v, cfg, *, causal, q_pos, kv_pos, use_flash=False):
+    fn = L.attend_flash if use_flash else L.attend_full
+    out = fn(q, k, v, q_positions=q_pos, kv_positions=kv_pos, causal=causal)
+    out = out.transpose(0, 2, 1, 3)                  # (B, S, H, hd)
+    if cfg.padded_heads != cfg.n_heads or cfg.padded_kv != cfg.n_kv:
+        out = out * L.head_mask(cfg).astype(out.dtype)[None, None, :, None]
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(out.dtype))
+
+
+# --------------------------------------------------------------------------
+# encoder / decoder forward
+# --------------------------------------------------------------------------
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, T, d) precomputed frame embeddings (conv-frontend stub)."""
+    cdt = jnp.dtype(cfg.dtype)
+    B, T, _ = frames.shape
+    use_flash = T >= 2048          # bidirectional flash for long frame seqs
+    x = frames.astype(cdt) + sinusoid_posemb(T, cfg.d_model).astype(cdt)[None]
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+
+    def body(x, p):
+        h = L.apply_norm(x, p["ln1"], cfg.norm)
+        q, k, v = _proj_qkv(p["attn"], h, h, cfg)
+        x = x + _attend(p["attn"], q, k, v, cfg, causal=False,
+                        q_pos=pos, kv_pos=pos, use_flash=use_flash)
+        h = L.apply_norm(x, p["ln2"], cfg.norm)
+        return constrain(x + L.mlp_forward(p["mlp"], h, cfg.mlp), "seq"), None
+
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.apply_norm(x, params["enc_norm"], cfg.norm)
+
+
+def decode_train(params, cfg: ModelConfig, enc_out, tokens):
+    """Teacher-forced decoder: (B, S_dec) -> (B, S_dec, vocab)."""
+    cdt = jnp.dtype(cfg.dtype)
+    B, S = tokens.shape
+    T = enc_out.shape[1]
+    x = params["embed"][tokens].astype(cdt) \
+        + params["dec_posemb"][:S].astype(cdt)[None]
+    dpos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    epos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+
+    def body(x, p):
+        h = L.apply_norm(x, p["ln1"], cfg.norm)
+        q, k, v = _proj_qkv(p["attn"], h, h, cfg)
+        x = x + _attend(p["attn"], q, k, v, cfg, causal=True,
+                        q_pos=dpos, kv_pos=dpos)
+        h = L.apply_norm(x, p["lnx"], cfg.norm)
+        q, k, v = _proj_qkv(p["xattn"], h, enc_out, cfg)
+        x = x + _attend(p["xattn"], q, k, v, cfg, causal=False,
+                        q_pos=dpos, kv_pos=epos)
+        h = L.apply_norm(x, p["ln2"], cfg.norm)
+        return constrain(x + L.mlp_forward(p["mlp"], h, cfg.mlp), "seq"), None
+
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = L.apply_norm(x, params["dec_norm"], cfg.norm)
+    return (x @ params["embed"].T.astype(cdt)).astype(jnp.float32)
+
+
+# ---- serving ---------------------------------------------------------------
+
+def init_dec_cache(cfg: ModelConfig, batch: int, enc_len: int):
+    cdt = jnp.dtype(cfg.dtype)
+    Ld = cfg.n_layers
+    kv = (Ld, batch, cfg.padded_kv, cfg.max_dec_len, cfg.head_dim)
+    xkv = (Ld, batch, cfg.padded_kv, enc_len, cfg.head_dim)
+    return {"k": jnp.zeros(kv, cdt), "v": jnp.zeros(kv, cdt),
+            "xk": jnp.zeros(xkv, cdt), "xv": jnp.zeros(xkv, cdt)}
+
+
+def prefill_cross(params, cfg: ModelConfig, enc_out, cache):
+    """Precompute per-layer cross k/v from the encoder output."""
+    cdt = enc_out.dtype
+
+    def body(_, xs):
+        p, = xs
+        k = jnp.einsum("btd,dhk->bthk", enc_out,
+                       p["xattn"]["wk"].astype(cdt)).transpose(0, 2, 1, 3)
+        v = jnp.einsum("btd,dhk->bthk", enc_out,
+                       p["xattn"]["wv"].astype(cdt)).transpose(0, 2, 1, 3)
+        return None, (k, v)
+
+    _, (xk, xv) = jax.lax.scan(body, None, (params["dec_layers"],))
+    return dict(cache, xk=xk, xv=xv)
+
+
+def decode_step(params, cfg: ModelConfig, tokens, pos, cache):
+    """One decoder step with self-cache write at ``pos`` and cached cross k/v.
+    tokens: (B, 1). Returns (logits, new_cache)."""
+    cdt = jnp.dtype(cfg.dtype)
+    B = tokens.shape[0]
+    x = params["embed"][tokens].astype(cdt) \
+        + jax.lax.dynamic_slice_in_dim(params["dec_posemb"], pos, 1,
+                                       axis=0).astype(cdt)[None, 0:1]
+    dpos = jnp.broadcast_to(pos + jnp.arange(1)[None], (B, 1))
+    T = cache["xk"].shape[3]
+    epos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+
+    def body(x, xs):
+        p, ck, cv, xk, xv = xs
+        h = L.apply_norm(x, p["ln1"], cfg.norm)
+        q, k, v = _proj_qkv(p["attn"], h, h, cfg)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k, pos, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v, pos, axis=2)
+        kv_pos = jnp.broadcast_to(jnp.arange(ck.shape[2])[None],
+                                  (B, ck.shape[2]))
+        out = L.attend_full(q, ck, cv, q_positions=dpos, kv_positions=kv_pos,
+                            kv_len=(pos + 1) * jnp.ones((B,), jnp.int32))
+        out = out.transpose(0, 2, 1, 3)              # (B, 1, H, hd)
+        if cfg.padded_heads != cfg.n_heads or cfg.padded_kv != cfg.n_kv:
+            out = out * L.head_mask(cfg).astype(cdt)[None, None, :, None]
+        x = x + jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"].astype(cdt))
+        h = L.apply_norm(x, p["lnx"], cfg.norm)
+        q, _, _ = _proj_qkv(p["xattn"], h, h, cfg)
+        x = x + _attend(p["xattn"], q, xk, xv, cfg, causal=False,
+                        q_pos=dpos, kv_pos=epos)
+        h = L.apply_norm(x, p["ln2"], cfg.norm)
+        return x + L.mlp_forward(p["mlp"], h, cfg.mlp), (ck, cv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    x = L.apply_norm(x, params["dec_norm"], cfg.norm)
+    logits = (x @ params["embed"].T.astype(cdt)).astype(jnp.float32)
+    return logits, dict(cache, k=nk, v=nv)

@@ -1,0 +1,7 @@
+"""Distributed schedules: nFFT (paper) / wFFT (baseline) + shared utilities."""
+from repro.parallel.fftconv_dist import fft_conv2d_sharded
+
+__all__ = ["fft_conv2d_sharded"]
+from repro.parallel.ep_moe import moe_forward_ep  # noqa: E402,F401
+
+__all__ += ["moe_forward_ep"]

@@ -1,0 +1,70 @@
+"""Activation-sharding constraints (trace-time context).
+
+GSPMD sharding propagation can drop the batch sharding inside
+scan+checkpoint+vmap regions (observed: fully-replicated flash-attention
+blocks, 86 GB/device). Production JAX frameworks pin activations with
+``with_sharding_constraint`` at block boundaries; this module provides that
+as a context manager so model code stays mesh-agnostic:
+
+    with activation_sharding(mesh):
+        lowered = jitted.lower(...)       # constraints baked at trace time
+
+Model code calls ``constrain(x, kind)`` with kind one of:
+    "seq"    (B, S, d)      -> P(dp, None, None)
+    "logits" (B, S, V)      -> P(dp, None, "model")
+    "heads"  (B, S, H, hd)  -> P(dp, None, "model"?, None)  (if H divides)
+Outside the context these are identity, so tests/CPU runs are unaffected.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, *, model_axis: str = "model"):
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    prev = getattr(_TLS, "ctx", None)
+    _TLS.ctx = (mesh, dp, model_axis)
+    try:
+        yield
+    finally:
+        _TLS.ctx = prev
+
+
+def _spec(kind: str, x, mesh, dp, model_axis):
+    n_model = mesh.shape[model_axis]
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    b_ok = x.shape[0] % dp_size == 0
+    b = dp if b_ok else None
+    if kind == "seq":
+        return P(b, *(None,) * (x.ndim - 1))
+    if kind == "logits":
+        v = model_axis if x.shape[-1] % n_model == 0 else None
+        return P(b, *(None,) * (x.ndim - 2), v)
+    if kind == "heads":
+        h = model_axis if x.shape[2] % n_model == 0 else None
+        return P(b, None, h, *(None,) * (x.ndim - 3))
+    raise ValueError(kind)
+
+
+def current_mesh():
+    """Mesh of the active activation_sharding context (or None)."""
+    ctx = getattr(_TLS, "ctx", None)
+    return None if ctx is None else ctx[0]
+
+
+def constrain(x, kind: str):
+    ctx = getattr(_TLS, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, dp, model_axis = ctx
+    spec = _spec(kind, x, mesh, dp, model_axis)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

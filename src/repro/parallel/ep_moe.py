@@ -1,0 +1,126 @@
+"""Expert-parallel MoE via boundary all-to-all — the nFFT schedule reused.
+
+The paper's insight: place data so the hot GEMM is purely local and pay a
+single re-partitioning collective at the stage *boundary*. For MoE that is
+exactly expert parallelism:
+
+    tokens (sharded dp x model)  --a2a-->  expert-major buffers (local E/N)
+            expert FFN: LOCAL matmuls, zero collectives (the hot stage)
+    expert outputs               --a2a-->  token-major, combine at source
+
+vs. the TP-MoE default in ``models/layers.moe_forward`` (d_ff sharded,
+psum in the hot stage — the "wFFT" of MoE).
+
+Implemented as a ``shard_map`` over (dp..., model): each rank routes its
+token shard, packs fixed-capacity per-(dest-rank, local-expert) buffers,
+a2a's them across the ``model`` axis, runs its local experts, and a2a's the
+results back. Capacity overflow drops (standard token-choice semantics).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ModelConfig
+# NOTE: repro.models.layers imports repro.parallel.act_sharding, so the
+# mlp_forward import happens lazily inside moe_forward_ep to avoid a cycle.
+
+
+def _ep_body(w_router, w1, w2, w3, x, *, cfg: ModelConfig, n_ranks: int,
+             model_axis: str, cap: int):
+    """Per-rank body. x: (Tl, d) local tokens; w1/w2/w3: (E_loc, ...) local
+    experts; w_router: (d, E) replicated. Returns (Tl, d)."""
+    Tl, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    E_loc = E // n_ranks
+    cdt = x.dtype
+
+    logits = (x @ w_router.astype(cdt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, K)              # (Tl, K)
+    if cfg.renorm_topk:
+        topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+
+    flat_e = topi.reshape(-1)                         # (Tl*K,) global expert
+    flat_t = jnp.repeat(jnp.arange(Tl), K)
+    flat_w = topw.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    counts = jnp.bincount(se, length=E)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(Tl * K) - starts[se]
+    keep = pos < cap
+    # slot within the (dest_rank, local_expert, capacity) send buffer
+    slot = jnp.where(keep, se * cap + pos, E * cap)
+
+    send = jnp.zeros((E * cap + 1, d), cdt).at[slot].set(
+        x[st] * keep[:, None].astype(cdt))[:E * cap]
+    send = send.reshape(n_ranks, E_loc * cap, d)
+    # ---- boundary a2a #1: token-major -> expert-major --------------------
+    recv = jax.lax.all_to_all(send, model_axis, 0, 0, tiled=False)
+    # recv: (n_ranks_src, E_loc, cap, d) -> (E_loc, n_ranks_src*cap, d)
+    recv = recv.reshape(n_ranks, E_loc, cap, d).transpose(1, 0, 2, 3) \
+        .reshape(E_loc, n_ranks * cap, d)
+
+    # ---- HOT STAGE: local expert FFN, zero collectives -------------------
+    if cfg.mlp in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp == "swiglu" else functools.partial(
+            jax.nn.gelu, approximate=True)
+        h = act(jnp.einsum("ecd,edf->ecf", recv, w1.astype(cdt))) * \
+            jnp.einsum("ecd,edf->ecf", recv, w2.astype(cdt))
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", recv, w1.astype(cdt)),
+                        approximate=True)
+    eo = jnp.einsum("ecf,efd->ecd", h, w3.astype(cdt))
+
+    # ---- boundary a2a #2: expert-major -> token-major ---------------------
+    back = eo.reshape(E_loc, n_ranks, cap, d).transpose(1, 0, 2, 3) \
+        .reshape(n_ranks, E_loc * cap, d)
+    got = jax.lax.all_to_all(back, model_axis, 0, 0, tiled=False)
+    got = got.reshape(E * cap, d)
+
+    gathered = got[jnp.minimum(slot, E * cap - 1)]
+    contrib = gathered * (sw * keep).astype(cdt)[:, None]
+    return jnp.zeros((Tl, d), cdt).at[st].add(contrib)
+
+
+def moe_forward_ep(p, x, cfg: ModelConfig, mesh, *, model_axis="model"):
+    """Expert-parallel MoE. x: (B, S, d) global; expert weights sharded on
+    the expert dim over ``model_axis``; tokens sharded (B over dp, S over
+    model). Shared experts (deepseek) run as dense TP outside the a2a."""
+    n_ranks = mesh.shape[model_axis]
+    assert cfg.n_experts % n_ranks == 0, (cfg.n_experts, n_ranks)
+    B, S, d = x.shape
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    Tl = (B // dp_size if B % dp_size == 0 else B) \
+        * (S // n_ranks if S % n_ranks == 0 else S)
+    cap = int(min(Tl, max(8, round(Tl * cfg.top_k / cfg.n_experts
+                                   * cfg.capacity_factor))))
+
+    body = functools.partial(_ep_body, cfg=cfg, n_ranks=n_ranks,
+                             model_axis=model_axis, cap=cap)
+
+    def wrapped(w_router, w1, w2, w3, x_loc):
+        Bl, Sl, _ = x_loc.shape
+        out = body(w_router, w1, w2, w3, x_loc.reshape(Bl * Sl, d))
+        return out.reshape(Bl, Sl, d)
+
+    b_ax = dp if B % dp_size == 0 else None
+    s_ax = model_axis if S % n_ranks == 0 else None
+    out = jax.shard_map(
+        wrapped, mesh=mesh,
+        in_specs=(P(), P(model_axis, None, None), P(model_axis, None, None),
+                  P(model_axis, None, None), P(b_ax, s_ax, None)),
+        out_specs=P(b_ax, s_ax, None),
+        check_vma=False,
+    )(p["w_gate_router"], p["w1"], p["w2"], p["w3"], x)
+    if cfg.n_shared:
+        from repro.models.layers import mlp_forward
+        out = out + mlp_forward(p["shared"], x, cfg.mlp)
+    return out

@@ -1,0 +1,6 @@
+from repro.train.step import (make_train_step, make_prefill_step,
+                              make_decode_step, init_train_state,
+                              cross_entropy)
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+           "init_train_state", "cross_entropy"]

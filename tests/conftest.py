@@ -1,0 +1,7 @@
+import os
+import sys
+
+# NOTE: per the dry-run contract, tests run on the REAL single CPU device —
+# XLA_FLAGS device-count forcing happens only in subprocess-based tests and
+# in repro.launch.dryrun itself.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

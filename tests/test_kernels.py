@@ -1,0 +1,82 @@
+"""Per-kernel allclose vs pure-jnp oracles (interpret mode on CPU),
+sweeping shapes and dtypes per the deliverable."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.cgemm import cgemm_pallas, cgemm_ref
+from repro.kernels.dft_tile import (tile_fft_pallas, tile_ifft_pallas,
+                                    tile_fft_ref, tile_ifft_ref)
+
+
+def _r(shape, seed, dtype=jnp.float32):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(shape),
+                       dtype)
+
+
+@pytest.mark.parametrize("P,M,C,N", [
+    (4, 128, 128, 128), (3, 200, 67, 130), (2, 16, 3, 5),
+    (1, 256, 64, 256), (9, 32, 512, 64),
+])
+@pytest.mark.parametrize("three_m", [True, False])
+def test_cgemm_shapes(P, M, C, N, three_m):
+    Dr, Di = _r((P, M, C), 1), _r((P, M, C), 2)
+    Gr, Gi = _r((P, C, N), 3), _r((P, C, N), 4)
+    Zr0, Zi0 = cgemm_ref(Dr, Di, Gr, Gi)
+    Zr, Zi = cgemm_pallas(Dr, Di, Gr, Gi, three_m=three_m)
+    scale = float(jnp.max(jnp.abs(Zr0))) + 1e-9
+    np.testing.assert_allclose(np.asarray(Zr) / scale,
+                               np.asarray(Zr0) / scale, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(Zi) / scale,
+                               np.asarray(Zi0) / scale, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cgemm_dtypes(dtype):
+    Dr, Di = _r((2, 64, 32), 5, dtype), _r((2, 64, 32), 6, dtype)
+    Gr, Gi = _r((2, 32, 48), 7, dtype), _r((2, 32, 48), 8, dtype)
+    Zr, Zi = cgemm_pallas(Dr, Di, Gr, Gi)
+    Zr0, Zi0 = cgemm_ref(Dr.astype(jnp.float32), Di.astype(jnp.float32),
+                         Gr.astype(jnp.float32), Gi.astype(jnp.float32))
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    scale = float(jnp.max(jnp.abs(Zr0))) + 1e-9
+    np.testing.assert_allclose(np.asarray(Zr, np.float32) / scale,
+                               np.asarray(Zr0) / scale, atol=tol)
+
+
+@pytest.mark.parametrize("blocks", [(32, 32, 32), (128, 64, 16), (64, 128, 128)])
+def test_cgemm_block_sweep(blocks):
+    bm, bn, bk = blocks
+    Dr, Di = _r((3, 96, 48), 9), _r((3, 96, 48), 10)
+    Gr, Gi = _r((3, 48, 80), 11), _r((3, 48, 80), 12)
+    Zr0, Zi0 = cgemm_ref(Dr, Di, Gr, Gi)
+    Zr, Zi = cgemm_pallas(Dr, Di, Gr, Gi, bm=bm, bn=bn, bk=bk)
+    scale = float(jnp.max(jnp.abs(Zr0))) + 1e-9
+    np.testing.assert_allclose(np.asarray(Zr) / scale,
+                               np.asarray(Zr0) / scale, atol=2e-5)
+
+
+@pytest.mark.parametrize("n,delta,bt", [
+    (7, 16, 4), (256, 16, 64), (5, 8, 8), (33, 32, 16), (1, 16, 1),
+])
+def test_tile_fft_roundtrip(n, delta, bt):
+    x = _r((n, delta, delta), n)
+    Tr, Ti = tile_fft_pallas(x, delta=delta, bt=bt)
+    Tr0, Ti0 = tile_fft_ref(x, delta)
+    np.testing.assert_allclose(np.asarray(Tr), np.asarray(Tr0),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(Ti), np.asarray(Ti0),
+                               rtol=1e-4, atol=1e-4)
+    y = tile_ifft_pallas(Tr, Ti, delta=delta, bt=bt)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_tile_fft_vs_numpy():
+    x = _r((6, 16, 16), 42)
+    Tr, Ti = tile_fft_ref(x, 16)
+    ref = np.fft.rfft2(np.asarray(x))
+    np.testing.assert_allclose(np.asarray(Tr), ref.real, rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(Ti), ref.imag, rtol=1e-4,
+                               atol=1e-4)

@@ -1,0 +1,78 @@
+"""Launch-layer consistency: sharding trees must match struct trees for
+every (arch x shape) cell — catches spec/struct drift without compiling."""
+import jax
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, LONG_CONTEXT_OK
+from repro.models.common import SHAPES
+from repro.launch import shardings as SH
+from repro.launch import specs as SP
+from repro.launch.analytic import analytic_costs
+
+
+class _FakeMesh:
+    """Shape-only stand-in (never touches jax device state)."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESHES = [_FakeMesh({"data": 16, "model": 16}),
+          _FakeMesh({"pod": 2, "data": 16, "model": 16})]
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_param_specs_match_struct(arch):
+    cfg = get_config(arch)
+    pstr = SP.param_structs(cfg)
+    for mesh in MESHES:
+        specs = SH.param_specs(cfg, pstr, mesh, fsdp=True)
+        assert jax.tree.structure(specs) == jax.tree.structure(pstr)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("shape", [s.name for s in SHAPES])
+def test_cache_specs_match_struct(arch, shape):
+    cfg = get_config(arch)
+    cell = [s for s in SHAPES if s.name == shape][0]
+    if cell.kind == "train":
+        pytest.skip("no cache for train cells")
+    if shape == "long_500k" and not LONG_CONTEXT_OK[arch]:
+        pytest.skip("documented long-context skip")
+    cstr = SP.cache_structs(cfg, cell)
+    for mesh in MESHES:
+        specs = SH.cache_specs(cfg, cell, mesh)
+        assert jax.tree.structure(specs) == jax.tree.structure(cstr), \
+            (arch, shape)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("shape", [s.name for s in SHAPES])
+def test_analytic_costs_positive(arch, shape):
+    cfg = get_config(arch)
+    cell = [s for s in SHAPES if s.name == shape][0]
+    if shape == "long_500k" and not LONG_CONTEXT_OK[arch]:
+        pytest.skip("documented long-context skip")
+    c = analytic_costs(cfg, cell)
+    assert c["flops"] > 0 and c["bytes"] > 0
+
+
+def test_dryrun_records_complete():
+    """The committed dry-run artifacts must cover all 40 cells x 2 meshes
+    with zero failures."""
+    import json
+    import os
+    d = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                     "dryrun")
+    if not os.path.isdir(d):
+        pytest.skip("dry-run artifacts not generated yet")
+    recs = {}
+    for fn in os.listdir(d):
+        if fn.endswith(".json") and "__ring" not in fn:
+            r = json.load(open(os.path.join(d, fn)))
+            recs[(r["arch"], r["shape"], r["mesh"])] = r["status"]
+    for mesh in ("pod256", "pod512"):
+        for arch in ARCH_NAMES:
+            for s in SHAPES:
+                st = recs.get((arch, s.name, mesh))
+                assert st in ("ok", "skip"), (arch, s.name, mesh, st)

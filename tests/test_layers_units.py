@@ -1,0 +1,180 @@
+"""Unit tests for the layer library: SSD vs naive recurrence, MoE vs dense
+reference, flash vs full attention, RoPE/norm properties."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+from repro.configs import get_config
+
+
+# --------------------------------------------------------------------------
+# Mamba2 SSD: chunked algorithm vs O(S^2)-free naive recurrence
+# --------------------------------------------------------------------------
+
+def _naive_ssm(xh, dt, A, Bm, Cm):
+    """h_t = h_{t-1} * exp(dt_t A) + dt_t B_t x_t ; y_t = C_t . h_t."""
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    h = np.zeros((Bsz, H, P, N))
+    ys = np.zeros((Bsz, S, H, P))
+    for t in range(S):
+        dec = np.exp(dt[:, t, :, None, None] * A[None, :, None, None])
+        upd = np.einsum("bh,bn,bhp->bhpn", dt[:, t], Bm[:, t], xh[:, t])
+        h = h * dec + upd
+        ys[:, t] = np.einsum("bn,bhpn->bhp", Cm[:, t], h)
+    return ys, h
+
+
+@pytest.mark.parametrize("S,chunk", [(16, 4), (24, 8), (8, 8)])
+def test_ssd_chunked_matches_naive(S, chunk):
+    rng = np.random.default_rng(0)
+    Bsz, H, P, N = 2, 3, 4, 5
+    xh = rng.standard_normal((Bsz, S, H, P)).astype(np.float32)
+    dt = rng.uniform(0.01, 0.5, (Bsz, S, H)).astype(np.float32)
+    A = -rng.uniform(0.1, 1.0, (H,)).astype(np.float32)
+    Bm = rng.standard_normal((Bsz, S, N)).astype(np.float32)
+    Cm = rng.standard_normal((Bsz, S, N)).astype(np.float32)
+    y, hT = L.ssd_chunked(jnp.asarray(xh), jnp.asarray(dt), jnp.asarray(A),
+                          jnp.asarray(Bm), jnp.asarray(Cm), chunk=chunk)
+    y0, h0 = _naive_ssm(xh, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), y0, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(hT), h0, rtol=1e-3, atol=1e-3)
+
+
+def test_mamba_decode_matches_train():
+    """Stepwise decode through mamba_forward must match the chunked path."""
+    cfg = get_config("mamba2-2.7b", smoke=True)
+    key = jax.random.PRNGKey(1)
+    p = L.make_mamba_params(key, cfg)
+    x = jax.random.normal(key, (2, 8, cfg.d_model), jnp.float32)
+    y_train, _ = L.mamba_forward(p, x, cfg, state=None)
+    state = L.init_mamba_state(cfg, 2)
+    ys = []
+    for t in range(8):
+        y_t, state = L.mamba_forward(p, x[:, t:t + 1], cfg, state=state)
+        ys.append(y_t)
+    y_dec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_train),
+                               rtol=3e-3, atol=3e-3)
+
+
+# --------------------------------------------------------------------------
+# MoE: sorted-capacity dispatch vs explicit dense reference
+# --------------------------------------------------------------------------
+
+def _moe_dense_ref(p, x, cfg):
+    B, S, d = x.shape
+    xt = np.asarray(x.reshape(B * S, d), np.float64)
+    logits = xt @ np.asarray(p["w_gate_router"], np.float64)
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs /= probs.sum(-1, keepdims=True)
+    k = cfg.top_k
+    out = np.zeros_like(xt)
+    for t in range(xt.shape[0]):
+        top = np.argsort(-probs[t])[:k]
+        w = probs[t][top]
+        if cfg.renorm_topk:
+            w = w / w.sum()
+        for e, wi in zip(top, w):
+            h = xt[t] @ np.asarray(p["w1"][e], np.float64)
+            h = h / (1 + np.exp(-h)) * (xt[t] @ np.asarray(p["w2"][e],
+                                                           np.float64))
+            out[t] += wi * (h @ np.asarray(p["w3"][e], np.float64))
+    return out.reshape(B, S, d)
+
+
+def test_moe_matches_dense_reference():
+    cfg = dataclasses.replace(get_config("mixtral-8x7b", smoke=True),
+                              capacity_factor=8.0, n_shared=0)
+    key = jax.random.PRNGKey(2)
+    p = L.make_moe_params(key, cfg)
+    x = jax.random.normal(key, (2, 6, cfg.d_model), jnp.float32)
+    y = L.moe_forward(p, x, cfg)
+    y0 = _moe_dense_ref(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y), y0, rtol=2e-3, atol=2e-3)
+
+
+def test_moe_group_invariance():
+    """Dispatch groups must not change the result (capacity permitting)."""
+    cfg = dataclasses.replace(get_config("mixtral-8x7b", smoke=True),
+                              capacity_factor=8.0)
+    key = jax.random.PRNGKey(5)
+    p = L.make_moe_params(key, cfg)
+    x = jax.random.normal(key, (2, 8, cfg.d_model), jnp.float32)
+    y1 = L.moe_forward(p, x, cfg)
+    y2 = L.moe_forward(p, x, dataclasses.replace(cfg, moe_groups=4))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("window,softcap,causal", [
+    (0, 0.0, True), (6, 0.0, True), (0, 30.0, True), (0, 0.0, False),
+    (4, 20.0, True),
+])
+def test_flash_equals_full(window, softcap, causal):
+    rng = np.random.default_rng(3)
+    B, H, S, hd = 2, 3, 32, 8
+    q = jnp.asarray(rng.standard_normal((B, H, S, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, H, S, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, H, S, hd)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    full = L.attend_full(q, k, v, q_positions=pos, kv_positions=pos,
+                         window=window, softcap=softcap, causal=causal)
+    flash = L.attend_flash(q, k, v, q_positions=pos, kv_positions=pos,
+                           window=window, softcap=softcap, causal=causal,
+                           q_block=8, kv_block=8)
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_gradients():
+    rng = np.random.default_rng(4)
+    B, H, S, hd = 1, 2, 16, 4
+    q = jnp.asarray(rng.standard_normal((B, H, S, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, H, S, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, H, S, hd)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def loss(fn):
+        return lambda q, k, v: jnp.sum(jnp.sin(fn(
+            q, k, v, q_positions=pos, kv_positions=pos, window=4)))
+
+    g1 = jax.grad(loss(lambda *a, **kw: L.attend_flash(
+        *a, q_block=4, kv_block=4, **kw)), argnums=(0, 1, 2))(q, k, v)
+    g0 = jax.grad(loss(L.attend_full), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g0):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(pos0=st.integers(0, 1000), theta=st.sampled_from([1e4, 1e6]))
+def test_rope_preserves_norm_and_relativity(pos0, theta):
+    """RoPE is a rotation (norm-preserving) and relative: the score of
+    (q at p+delta, k at p) is independent of p."""
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.standard_normal((1, 2, 1, 8)), jnp.float32)
+    pos = jnp.asarray([[pos0, pos0 + 3]])
+    y = L.rope(x, pos, theta)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1),
+        rtol=1e-4)
+    q = jnp.asarray(rng.standard_normal((8,)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((8,)), jnp.float32)
+
+    def score(p):
+        qr = L.rope(q[None, None, None], jnp.asarray([[p + 3]]), theta)
+        kr = L.rope(k[None, None, None], jnp.asarray([[p]]), theta)
+        return float(jnp.sum(qr * kr))
+
+    assert abs(score(pos0) - score(0)) < 1e-2

@@ -1,0 +1,147 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one forward /
+train step, shape + NaN assertions; prefill+decode consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import lm as LM
+from repro.models import whisper as WH
+from repro.models import layers as L
+from repro.optim import AdamWConfig
+from repro.train import make_train_step, init_train_state
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 16
+
+
+def _batch(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    if cfg.encdec:
+        return {
+            "frames": jnp.asarray(
+                rng.standard_normal((B, 24, cfg.d_model)), jnp.float32),
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, 8)),
+                                  jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, 8)),
+                                  jnp.int32),
+        }
+    out = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                 jnp.int32),
+           "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                 jnp.int32)}
+    if cfg.frontend == "vision_stub":
+        out["img_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_frontend_tokens, cfg.d_model)),
+            jnp.float32)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_forward_shapes_no_nan(arch):
+    cfg = get_config(arch, smoke=True)
+    batch = _batch(cfg)
+    if cfg.encdec:
+        p = WH.init_whisper_params(cfg, KEY)
+        enc = WH.encode(p, cfg, batch["frames"])
+        logits = WH.decode_train(p, cfg, enc, batch["tokens"])
+        assert logits.shape == (B, 8, cfg.vocab)
+    else:
+        p = LM.init_lm_params(cfg, KEY)
+        logits = LM.lm_forward(p, cfg, batch["tokens"],
+                               img_embeds=batch.get("img_embeds"),
+                               remat=False)
+        extra = cfg.n_meta_tokens + (cfg.n_frontend_tokens
+                                     if "img_embeds" in batch else 0)
+        assert logits.shape == (B, S + extra, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_train_step_no_nan(arch):
+    cfg = get_config(arch, smoke=True)
+    params, opt = init_train_state(cfg, KEY)
+    step = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3,
+                                                    total_steps=10)))
+    params, opt, m = step(params, opt, _batch(cfg))
+    assert np.isfinite(float(m["loss"]))
+    assert not any(bool(jnp.any(jnp.isnan(x)))
+                   for x in jax.tree.leaves(params))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-14b", "gemma2-27b", "hymba-1.5b",
+                                  "mamba2-2.7b", "deepseek-v2-lite-16b"])
+def test_prefill_decode_matches_forward(arch):
+    """prefill(x[:p]) then decode steps must reproduce teacher-forced
+    forward logits (cache correctness)."""
+    cfg = get_config(arch, smoke=True)
+    p = LM.init_lm_params(cfg, KEY)
+    toks = jnp.asarray(np.random.default_rng(1).integers(
+        0, cfg.vocab, (B, 12)), jnp.int32)
+    full = LM.lm_forward(p, cfg, toks, remat=False)     # (B, S+meta, V)
+    meta = cfg.n_meta_tokens
+    cache = LM.init_cache(cfg, B, 12 + meta + 4)
+    lg, cache, _ = LM.lm_prefill(p, cfg, toks[:, :8], cache, use_flash=False)
+    np.testing.assert_allclose(np.asarray(lg[:, -1]),
+                               np.asarray(full[:, meta + 7]),
+                               rtol=2e-2, atol=2e-2)
+    pos = 8 + meta
+    for i in range(2):
+        lg, cache = LM.lm_decode_step(p, cfg, toks[:, 8 + i:9 + i],
+                                      jnp.int32(pos + i), cache)
+        np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                                   np.asarray(full[:, meta + 8 + i]),
+                                   rtol=2e-2, atol=2e-2)
+
+
+def test_head_padding_exact():
+    """Padded-head model must equal the unpadded model with embedded
+    real weights (dead slots masked)."""
+    cfg_pad = get_config("qwen3-14b", smoke=True)       # pad_heads=6
+    cfg_ref = dataclasses.replace(cfg_pad, pad_heads=0)
+    pp = LM.init_lm_params(cfg_pad, jax.random.PRNGKey(3))
+    mask = np.asarray(L.head_mask(cfg_pad)).astype(bool)
+
+    def fix(d):
+        if isinstance(d, dict):
+            out = {}
+            for k, v in d.items():
+                if k == "wq":
+                    out[k] = v[..., mask, :]
+                elif k == "wo":
+                    out[k] = v[:, mask] if v.ndim == 4 else v[mask]
+                else:
+                    out[k] = fix(v)
+            return out
+        if isinstance(d, list):
+            return [fix(x) for x in d]
+        return d
+
+    pr = fix(pp)
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, 16), 0,
+                              cfg_pad.vocab)
+    y_pad = LM.lm_forward(pp, cfg_pad, toks, remat=False)
+    y_ref = LM.lm_forward(pr, cfg_ref, toks, remat=False)
+    np.testing.assert_allclose(np.asarray(y_pad), np.asarray(y_ref),
+                               atol=1e-3)
+
+
+def test_whisper_decode_matches_teacher_forcing():
+    cfg = get_config("whisper-small", smoke=True)
+    p = WH.init_whisper_params(cfg, KEY)
+    rng = np.random.default_rng(2)
+    frames = jnp.asarray(rng.standard_normal((B, 24, cfg.d_model)),
+                         jnp.float32)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, 6)), jnp.int32)
+    enc = WH.encode(p, cfg, frames)
+    full = WH.decode_train(p, cfg, enc, toks)
+    cache = WH.prefill_cross(p, cfg, enc, WH.init_dec_cache(cfg, B, 24))
+    for i in range(4):
+        lg, cache = WH.decode_step(p, cfg, toks[:, i:i + 1], jnp.int32(i),
+                                   cache)
+        np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                                   np.asarray(full[:, i]),
+                                   rtol=2e-2, atol=2e-2)
