@@ -25,17 +25,16 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(ndev)d"
 import sys, json, time
 import jax, jax.numpy as jnp, numpy as np
-from repro.parallel import fft_conv2d_sharded
-from repro.core import make_spec
+from repro.conv import plan_conv
+from repro.compat import make_mesh
 from repro.launch.roofline import parse_collectives, roofline_terms, \
     PEAK_FLOPS, HBM_BW
-mesh = jax.make_mesh((%(nd)d, %(nm)d), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((%(nd)d, %(nm)d), ("data", "model"))
 spec = json.loads(sys.argv[1])
 variant = spec["variant"]
-kw = dict(padding=spec["pad"], strategy="nfft")
+kw = dict(padding=spec["pad"], schedule="nfft", mesh=mesh)
 if variant == "wfft":
-    kw["strategy"] = "wfft"
+    kw["schedule"] = "wfft"
 elif variant == "nfft":
     pass
 elif variant == "nfft_repG":
@@ -50,7 +49,7 @@ x = jnp.asarray(rng.standard_normal(
     (spec["B"], spec["C"], spec["H"], spec["W"])), jnp.float32)
 k = jnp.asarray(rng.standard_normal(
     (spec["Co"], spec["C"], spec["kh"], spec["kh"])), jnp.float32)
-f = jax.jit(lambda a, b: fft_conv2d_sharded(a, b, mesh, **kw))
+f = jax.jit(plan_conv(x.shape, k.shape, **kw))
 lowered = f.lower(x, k)
 comp = lowered.compile()
 coll = parse_collectives(comp.as_text())

@@ -24,10 +24,10 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys, json, time
 import jax, jax.numpy as jnp, numpy as np
-from repro.parallel import fft_conv2d_sharded
+from repro.conv import plan_conv
+from repro.compat import make_mesh
 from repro.launch.roofline import parse_collectives
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 spec = json.loads(sys.argv[1])
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.standard_normal(
@@ -36,8 +36,8 @@ k = jnp.asarray(rng.standard_normal(
     (spec["Co"], spec["C"], spec["kh"], spec["kh"])), jnp.float32)
 out = {}
 for strat in ("nfft", "wfft"):
-    f = jax.jit(lambda a, b, s=strat: fft_conv2d_sharded(
-        a, b, mesh, strategy=s, padding=spec["pad"]))
+    f = jax.jit(plan_conv(x.shape, k.shape, schedule=strat, mesh=mesh,
+                          padding=spec["pad"]))
     y = f(x, k)
     jax.block_until_ready(y)
     ts = []

@@ -28,9 +28,9 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.core import make_spec
 from repro.core.cgemm import cgemm
+from repro.compat import make_mesh, shard_map
 from repro.launch.roofline import parse_collectives
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 spec = json.loads(sys.argv[1])
 B, C, Co, H, W, kh, pad = (spec[k] for k in
                            ("B", "C", "Co", "H", "W", "kh", "pad"))
@@ -45,7 +45,6 @@ def mk(shape, pspec):
 
 
 out = {}
-shard_map = jax.shard_map
 # --- nFFT hot stage: P sharded over model, M over data; local einsum ------
 Dr = mk((cs.P, cs.M, C), P("model", "data", None))
 Di = mk((cs.P, cs.M, C), P("model", "data", None))
@@ -56,8 +55,8 @@ f_n = jax.jit(
               mesh=mesh,
               in_specs=(P("model", "data", None), P("model", "data", None),
                         P("model", None, None), P("model", None, None)),
-              out_specs=(P("model", "data", None), P("model", "data", None)),
-              check_vma=False))
+              out_specs=(P("model", "data", None),
+                         P("model", "data", None))))
 # --- wFFT hot stage: C sharded over model -> psum inside ------------------
 Dr2 = mk((cs.P, cs.M, C), P(None, "data", "model"))
 Di2 = mk((cs.P, cs.M, C), P(None, "data", "model"))
@@ -74,8 +73,7 @@ f_w = jax.jit(
     shard_map(wfft_body, mesh=mesh,
               in_specs=(P(None, "data", "model"), P(None, "data", "model"),
                         P(None, "model", None), P(None, "model", None)),
-              out_specs=(P(None, "data", None), P(None, "data", None)),
-              check_vma=False))
+              out_specs=(P(None, "data", None), P(None, "data", None))))
 
 for name, f, args in (("nfft", f_n, (Dr, Di, Gr, Gi)),
                       ("wfft", f_w, (Dr2, Di2, Gr2, Gi2))):

@@ -16,7 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_convs import TABLE1
-from repro.core import fft_conv2d, conv2d_direct, make_spec
+from repro.conv import plan_conv
+from repro.core import conv2d_direct
 
 
 def _time(f, *args, reps=3):
@@ -40,7 +41,9 @@ def run(batch=2, reps=3, layers=None, check=True):
             (batch, layer.C, layer.H, layer.W)), jnp.float32)
         k = jnp.asarray(rng.standard_normal(
             (layer.Cout, layer.C, layer.kh, layer.kw)), jnp.float32)
-        f_fft = jax.jit(lambda x, k, p=layer.pad: fft_conv2d(x, k, padding=p))
+        plan = plan_conv(x.shape, k.shape, padding=layer.pad,
+                         backend="fft-xla")
+        f_fft = jax.jit(plan)
         f_dir = jax.jit(lambda x, k, p=layer.pad: conv2d_direct(
             x, k, padding=p))
         if check:
@@ -50,7 +53,7 @@ def run(batch=2, reps=3, layers=None, check=True):
             assert err < 1e-4, (layer.name, err)
         t_fft = _time(f_fft, x, k, reps=reps)
         t_dir = _time(f_dir, x, k, reps=reps)
-        spec = make_spec(x.shape, k.shape, layer.pad)
+        spec = plan.spec
         gflops = spec.direct_flops() / 1e9
         rows.append((layer.name, t_fft * 1e6, gflops / t_fft,
                      t_dir * 1e6, t_dir / t_fft))

@@ -1,12 +1,18 @@
-"""Quickstart: the paper's FFT-based convolution as a drop-in op.
+"""Quickstart: the paper's FFT-based convolution behind the plan/execute API.
 
     PYTHONPATH=src python examples/quickstart.py
+
+``plan_conv`` picks the algorithm (direct vs FFT) from the geometry's cost
+model, freezes the schedule, and the returned plan executes (and
+differentiates) like a plain function. Plans are cached by shape, so
+planning inside a layer loop is free after the first call.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fft_conv2d, conv2d_direct, make_spec
+from repro.conv import plan_conv, plan_cache_info
+from repro.core import conv2d_direct
 
 rng = np.random.default_rng(0)
 
@@ -14,22 +20,27 @@ rng = np.random.default_rng(0)
 x = jnp.asarray(rng.standard_normal((2, 64, 56, 56)), jnp.float32)
 k = jnp.asarray(rng.standard_normal((128, 64, 3, 3)), jnp.float32)
 
-y_fft = fft_conv2d(x, k, padding=1)           # the paper's algorithm
-y_ref = conv2d_direct(x, k, padding=1)        # direct oracle
+plan = plan_conv(x.shape, k.shape, padding=1)      # backend="auto"
+y_fft = plan(x, k)                                 # execute
+y_ref = conv2d_direct(x, k, padding=1)             # direct oracle
 
 err = float(jnp.max(jnp.abs(y_fft - y_ref)) / jnp.max(jnp.abs(y_ref)))
 print(f"output {y_fft.shape}, rel err vs direct conv: {err:.2e}")
+print(plan.describe())
 
-spec = make_spec(x.shape, k.shape, padding=1)
+spec = plan.spec
 print(f"tiling: {spec.X}x{spec.D} tiles of {spec.delta}x{spec.delta}, "
       f"P={spec.P} frequency points, CGEMM {spec.M}x{spec.C}x{spec.Cout}")
-print(f"direct FLOPs {spec.direct_flops()/1e9:.2f}G vs "
-      f"CGEMM FLOPs {spec.cgemm_flops(three_m=True)/1e9:.2f}G "
-      f"+ transforms {spec.transform_flops()/1e9:.2f}G")
 
-# It is differentiable (custom VJP): train through it.
+# The cost model sends small geometries to the direct backend instead.
+tiny = plan_conv((1, 3, 16, 16), (4, 3, 1, 1))
+print(f"auto backend for a 1x1-kernel layer: {tiny.backend} "
+      f"(vs {plan.backend} for the VGG layer)")
+
+# Plans are differentiable where the underlying path is (custom VJP).
 def loss(k):
-    return jnp.mean((fft_conv2d(x, k, padding=1) - y_ref) ** 2)
+    return jnp.mean((plan(x, k) - y_ref) ** 2)
 
 g = jax.grad(loss)(k)
-print("grad norm through fft_conv2d:", float(jnp.linalg.norm(g)))
+print("grad norm through the plan:", float(jnp.linalg.norm(g)))
+print("plan cache:", plan_cache_info())

@@ -1,0 +1,30 @@
+"""Version compatibility shims for the jax API surface.
+
+The repo targets current jax (``jax.shard_map`` with ``check_vma``,
+``jax.make_mesh(..., axis_types=...)``); seed environments may carry an
+older release where ``shard_map`` lives in ``jax.experimental`` (with
+``check_rep``) and ``make_mesh`` has no ``axis_types``.  Everything that
+builds meshes or shard_maps goes through these two wrappers.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """jax.shard_map with replication checking off, any jax version."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """jax.make_mesh with Auto axis types where supported."""
+    kwargs = {} if devices is None else {"devices": devices}
+    if hasattr(jax.sharding, "AxisType"):
+        kwargs["axis_types"] = \
+            (jax.sharding.AxisType.Auto,) * len(axis_names)
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)

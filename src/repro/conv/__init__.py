@@ -1,0 +1,29 @@
+"""repro.conv — plan/execute convolution engine.
+
+    from repro.conv import plan_conv
+    plan = plan_conv(x.shape, k.shape, padding=1)    # cached
+    y = plan(x, k)
+
+See docs/conv_api.md for the backend/schedule matrix and migration notes
+from the deprecated ``fft_conv2d`` / ``fft_conv2d_pallas`` /
+``fft_conv2d_sharded`` entry points.
+"""
+from repro.conv.registry import (
+    BackendInfo, ScheduleInfo, register_backend, register_schedule,
+    get_backend, get_schedule, available_backends, available_schedules,
+)
+from repro.conv.plan import (
+    ConvPlan, plan_conv, conv2d, plan_cache_info, clear_plan_cache,
+)
+from repro.conv import backends as _backends
+
+_backends.register_builtin()
+
+__all__ = [
+    "ConvPlan", "plan_conv", "conv2d",
+    "plan_cache_info", "clear_plan_cache",
+    "BackendInfo", "ScheduleInfo",
+    "register_backend", "register_schedule",
+    "get_backend", "get_schedule",
+    "available_backends", "available_schedules",
+]

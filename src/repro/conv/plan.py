@@ -1,0 +1,274 @@
+"""Plan/execute convolution engine (FFTW-style).
+
+The best convolution algorithm is geometry-dependent (direct vs FFT
+crossover; tile size; 3M vs 4M complex product; nFFT tuple partitioning vs
+wFFT), so selection lives in a planner rather than at call sites:
+
+    plan = plan_conv(x.shape, k.shape, padding=1)   # plan once
+    y = plan(x, k)                                  # execute many times
+
+``ConvPlan`` freezes everything the execution needs: the geometry
+(``ConvSpec``), the (backend, schedule) pair, precision, and tuning
+parameters (``three_m``, CGEMM block sizes, mesh axes).  Plans are
+memoized in a keyed cache so repeated layer shapes pay planning once.
+
+``backend="auto"`` picks direct vs FFT from the ``ConvSpec`` cost model;
+``schedule="auto"`` picks ``nfft`` when a mesh is given, else ``local``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from typing import Any, Optional
+
+from repro.core.conv_spec import ConvSpec
+from repro.conv import registry
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvPlan:
+    """Frozen, executable schedule for one convolution geometry.
+
+    Execute with ``plan(x, k)``; ``x`` must be ``(B, C, H, W)`` and ``k``
+    ``(C', C, kh, kw)`` matching the planned shapes exactly (plan again
+    for a new geometry — planning is cached, so this is cheap).
+    """
+    spec: ConvSpec
+    backend: str                       # resolved registry name
+    schedule: str                      # resolved registry name
+    padding: tuple                     # (pad_h, pad_w)
+    three_m: bool = True               # 3M (Karatsuba) vs 4M complex product
+    bm: Optional[int] = None           # Pallas CGEMM block sizes
+    bn: Optional[int] = None
+    bk: Optional[int] = None
+    compute_dtype: Any = None          # CGEMM operand dtype (e.g. bf16)
+    mesh: Any = None                   # jax Mesh for sharded schedules
+    data_axis: str = "data"
+    model_axis: str = "model"
+    replicate_kernel_transform: bool = False
+
+    # ---- execution --------------------------------------------------------
+    def __call__(self, x, k):
+        if tuple(x.shape) != self.x_shape:
+            raise ValueError(
+                f"plan was built for input {self.x_shape}, got "
+                f"{tuple(x.shape)}; call plan_conv for the new geometry")
+        if tuple(k.shape) != self.k_shape:
+            raise ValueError(
+                f"plan was built for kernel {self.k_shape}, got "
+                f"{tuple(k.shape)}; call plan_conv for the new geometry")
+        return registry.get_backend(self.backend).execute(self, x, k)
+
+    # ---- introspection ----------------------------------------------------
+    @property
+    def x_shape(self) -> tuple:
+        s = self.spec
+        return (s.B, s.C, s.H, s.W)
+
+    @property
+    def k_shape(self) -> tuple:
+        s = self.spec
+        return (s.Cout, s.C, s.kh, s.kw)
+
+    @property
+    def out_shape(self) -> tuple:
+        s = self.spec
+        return (s.B, s.Cout, s.Ho, s.Wo)
+
+    @property
+    def differentiable(self) -> bool:
+        return self.schedule in registry.get_backend(self.backend).differentiable
+
+    def flops(self) -> int:
+        """Cost-model FLOPs of the planned path (for rooflines)."""
+        if self.backend == "direct":
+            return self.spec.direct_flops()
+        return self.spec.cgemm_flops(three_m=self.three_m) \
+            + self.spec.transform_flops()
+
+    def describe(self) -> str:
+        s = self.spec
+        lines = [
+            f"ConvPlan {self.x_shape} * {self.k_shape} -> {self.out_shape}",
+            f"  backend={self.backend} schedule={self.schedule} "
+            f"three_m={self.three_m} delta={s.delta}",
+            f"  cost-model FLOPs: direct {s.direct_flops():.3e}, "
+            f"fft {s.cgemm_flops(three_m=self.three_m) + s.transform_flops():.3e}",
+        ]
+        if self.mesh is not None:
+            lines.append(
+                f"  mesh axes: {self.data_axis}={self.mesh.shape[self.data_axis]} "
+                f"x {self.model_axis}={self.mesh.shape[self.model_axis]}, "
+                f"replicate_kernel_transform={self.replicate_kernel_transform}")
+        if self.bm or self.bn or self.bk:
+            lines.append(f"  cgemm blocks bm={self.bm} bn={self.bn} bk={self.bk}")
+        if self.compute_dtype is not None:
+            lines.append(f"  compute_dtype={self.compute_dtype}")
+        return "\n".join(lines)
+
+
+# --------------------------------------------------------------------------
+# Plan cache
+# --------------------------------------------------------------------------
+
+PlanCacheInfo = collections.namedtuple("PlanCacheInfo",
+                                       ["hits", "misses", "size"])
+
+_cache_lock = threading.Lock()
+_plan_cache: dict = {}
+_cache_hits = 0
+_cache_misses = 0
+
+
+def plan_cache_info() -> PlanCacheInfo:
+    with _cache_lock:
+        return PlanCacheInfo(_cache_hits, _cache_misses, len(_plan_cache))
+
+
+def clear_plan_cache() -> None:
+    global _cache_hits, _cache_misses
+    with _cache_lock:
+        _plan_cache.clear()
+        _cache_hits = 0
+        _cache_misses = 0
+
+
+# --------------------------------------------------------------------------
+# Planner
+# --------------------------------------------------------------------------
+
+def _normalize_padding(padding) -> tuple:
+    if isinstance(padding, int):
+        return (padding, padding)
+    ph, pw = padding
+    return (int(ph), int(pw))
+
+
+def _auto_backend(spec: ConvSpec, three_m: bool) -> str:
+    """Direct-vs-FFT crossover on the ConvSpec cost model."""
+    fft = spec.cgemm_flops(three_m=three_m) + spec.transform_flops()
+    return "direct" if spec.direct_flops() <= fft else "fft-xla"
+
+
+def _resolve(x_shape, k_shape, padding, delta, backend, schedule, mesh,
+             three_m, bm, bn, bk, compute_dtype, data_axis, model_axis,
+             replicate_kernel_transform) -> ConvPlan:
+    B, C, H, W = x_shape
+    Cout, C2, kh, kw = k_shape
+    if C != C2:
+        raise ValueError(f"channel mismatch: input C={C}, kernel C={C2}")
+    # Kernels larger than the FFT tile rule out the FFT backends but are
+    # fine for direct conv: widen the (then-unused) tile so the spec
+    # validates, and let auto resolve to direct below.
+    oversize = max(kh, kw) > delta
+    if oversize and backend not in ("auto", "direct"):
+        registry.get_backend(backend)        # unknown names error first
+        raise ValueError(
+            f"kernel {kh}x{kw} exceeds tile size delta={delta}; only the "
+            f"'direct' backend supports it (requested {backend!r})")
+    spec = ConvSpec(B=B, C=C, Cout=Cout, H=H, W=W, kh=kh, kw=kw,
+                    pad_h=padding[0], pad_w=padding[1],
+                    delta=max(delta, kh, kw))
+
+    # -- schedule -----------------------------------------------------------
+    if schedule == "auto":
+        schedule = "nfft" if mesh is not None else "local"
+    sched = registry.get_schedule(schedule)
+    if sched.requires_mesh and mesh is None:
+        raise ValueError(f"schedule {schedule!r} requires a mesh")
+    if not sched.requires_mesh and mesh is not None:
+        raise ValueError(
+            f"schedule {schedule!r} ignores the mesh; pass schedule='nfft' "
+            "or 'wfft' (or drop the mesh)")
+    if sched.requires_mesh:
+        for axis in (data_axis, model_axis):
+            if axis not in mesh.shape:
+                raise ValueError(
+                    f"mesh has no axis {axis!r} (axes: {tuple(mesh.shape)})")
+        # The sharded impl pads channels up to model-axis multiples and
+        # slabs P over it; P divisibility must hold or execution raises.
+        if spec.P % mesh.shape[model_axis]:
+            raise ValueError(
+                f"P={spec.P} (delta={delta}) not divisible by model axis "
+                f"{mesh.shape[model_axis]}")
+
+    # -- backend ------------------------------------------------------------
+    if backend == "auto":
+        if oversize:
+            backend = "direct"
+        else:
+            backend = "fft-xla" if sched.requires_mesh \
+                else _auto_backend(spec, three_m)
+    be = registry.get_backend(backend)
+    if schedule not in be.schedules:
+        raise ValueError(
+            f"backend {backend!r} does not support schedule {schedule!r} "
+            f"(supported: {be.schedules})")
+
+    return ConvPlan(spec=spec, backend=backend, schedule=schedule,
+                    padding=padding, three_m=three_m, bm=bm, bn=bn, bk=bk,
+                    compute_dtype=compute_dtype, mesh=mesh,
+                    data_axis=data_axis, model_axis=model_axis,
+                    replicate_kernel_transform=replicate_kernel_transform)
+
+
+def plan_conv(x_shape, k_shape, *, padding=0, delta: int = 16,
+              backend: str = "auto", schedule: str = "auto", mesh=None,
+              three_m: bool = True, bm=None, bn=None, bk=None,
+              compute_dtype=None, data_axis: str = "data",
+              model_axis: str = "model",
+              replicate_kernel_transform: bool = False,
+              cache: bool = True) -> ConvPlan:
+    """Create (or fetch from the plan cache) a ``ConvPlan``.
+
+    Args:
+      x_shape: input shape ``(B, C, H, W)``.
+      k_shape: kernel shape ``(C', C, kh, kw)`` with ``kh, kw <= delta``.
+      padding: int or ``(ph, pw)`` zero padding.
+      delta: FFT tile size (the paper uses 16).
+      backend: ``"direct"`` | ``"fft-xla"`` | ``"fft-pallas"`` | ``"auto"``
+        (cost-model crossover; never auto-selects Pallas).
+      schedule: ``"local"`` | ``"nfft"`` | ``"wfft"`` | ``"auto"``
+        (``nfft`` when a mesh is given, else ``local``).
+      mesh: jax Mesh with ``data_axis``/``model_axis``; required by the
+        sharded schedules.
+      three_m: 3-matmul (Karatsuba) vs 4-matmul complex product.
+      bm, bn, bk: Pallas CGEMM block sizes (``fft-pallas`` only).
+      compute_dtype: CGEMM operand dtype for sharded schedules (e.g. bf16;
+        f32 accumulation).
+      replicate_kernel_transform: nfft only — replicate the cheap kernel
+        transform on every model rank instead of all-to-all-ing it.
+      cache: memoize the plan under its argument key.
+
+    Returns:
+      A frozen ``ConvPlan``; call it as ``plan(x, k)``.
+    """
+    global _cache_hits, _cache_misses
+    x_shape, k_shape = tuple(map(int, x_shape)), tuple(map(int, k_shape))
+    padding = _normalize_padding(padding)
+    key = (x_shape, k_shape, padding, delta, backend, schedule, mesh,
+           three_m, bm, bn, bk, compute_dtype, data_axis, model_axis,
+           replicate_kernel_transform)
+    if cache:
+        with _cache_lock:
+            plan = _plan_cache.get(key)
+            if plan is not None:
+                _cache_hits += 1
+                return plan
+    plan = _resolve(x_shape, k_shape, padding, delta, backend, schedule,
+                    mesh, three_m, bm, bn, bk, compute_dtype, data_axis,
+                    model_axis, replicate_kernel_transform)
+    if cache:
+        with _cache_lock:
+            _cache_misses += 1
+            _plan_cache[key] = plan
+    return plan
+
+
+def conv2d(x, k, **kwargs):
+    """One-shot convenience: ``plan_conv(x.shape, k.shape, **kwargs)(x, k)``.
+
+    The plan cache makes repeated same-shape calls pay planning once.
+    """
+    return plan_conv(tuple(x.shape), tuple(k.shape), **kwargs)(x, k)

@@ -1,0 +1,90 @@
+"""Backend / schedule registry for the plan-execute convolution engine.
+
+A *backend* is a compute implementation (direct XLA conv, XLA FFT-conv,
+Pallas-CGEMM FFT-conv, ...); a *schedule* is a data-movement strategy
+(single-device ``local``, or the mesh-sharded ``nfft`` / ``wfft`` of the
+paper).  Backends declare which schedules they support; ``plan_conv``
+resolves a (backend, schedule) pair and the plan dispatches through this
+registry at execute time.
+
+Third-party backends register the same way the built-ins do:
+
+    register_backend("my-backend", execute=my_fn, schedules=("local",))
+
+where ``execute(plan, x, k) -> y`` receives the frozen ``ConvPlan``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendInfo:
+    """A registered convolution backend."""
+    name: str
+    execute: Callable          # (plan, x, k) -> (B, C', Ho, Wo)
+    schedules: tuple           # schedule names this backend supports
+    differentiable: tuple = () # schedules with working reverse-mode grads
+    description: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleInfo:
+    """A registered data-movement schedule."""
+    name: str
+    requires_mesh: bool
+    description: str = ""
+
+
+_BACKENDS: dict = {}
+_SCHEDULES: dict = {}
+
+
+def register_schedule(name: str, *, requires_mesh: bool,
+                      description: str = "") -> ScheduleInfo:
+    info = ScheduleInfo(name=name, requires_mesh=requires_mesh,
+                        description=description)
+    _SCHEDULES[name] = info
+    return info
+
+
+def register_backend(name: str, execute: Callable, *, schedules,
+                     differentiable=(), description: str = "") -> BackendInfo:
+    schedules = tuple(schedules)
+    for s in schedules:
+        if s not in _SCHEDULES:
+            raise ValueError(
+                f"backend {name!r} declares unknown schedule {s!r}; "
+                f"register_schedule it first (known: {available_schedules()})")
+    info = BackendInfo(name=name, execute=execute, schedules=schedules,
+                       differentiable=tuple(differentiable),
+                       description=description)
+    _BACKENDS[name] = info
+    return info
+
+
+def get_backend(name: str) -> BackendInfo:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown conv backend {name!r}; available: "
+            f"{available_backends()}") from None
+
+
+def get_schedule(name: str) -> ScheduleInfo:
+    try:
+        return _SCHEDULES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown conv schedule {name!r}; available: "
+            f"{available_schedules()}") from None
+
+
+def available_backends() -> tuple:
+    return tuple(sorted(_BACKENDS))
+
+
+def available_schedules() -> tuple:
+    return tuple(sorted(_SCHEDULES))

@@ -17,6 +17,7 @@ Convolution here is ML cross-correlation; ``conv2d_direct`` is the oracle.
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -31,11 +32,15 @@ from repro.core.cgemm import cgemm
 # --------------------------------------------------------------------------
 
 def conv2d_direct(x, k, *, padding=0):
-    """Direct convolution oracle: lax.conv_general_dilated, NCHW/OIHW."""
+    """Direct convolution oracle: lax.conv_general_dilated, NCHW/OIHW.
+
+    ``padding`` is an int or ``(pad_h, pad_w)``, symmetric per axis —
+    the same convention as the FFT path (lax wants (lo, hi) per dim).
+    """
     pad = (padding, padding) if isinstance(padding, int) else padding
     return jax.lax.conv_general_dilated(
         x, k, window_strides=(1, 1),
-        padding=[pad, pad],
+        padding=[(pad[0], pad[0]), (pad[1], pad[1])],
         dimension_numbers=("NCHW", "OIHW", "NCHW"),
     )
 
@@ -159,27 +164,34 @@ _fft_conv2d.defvjp(_fft_conv2d_fwd, _fft_conv2d_bwd)
 
 
 def fft_conv2d(x, k, *, padding=0, delta=16, three_m: bool = True):
-    """FFT-based 2-D convolution (cross-correlation), differentiable.
+    """Deprecated: use ``repro.conv.plan_conv(..., backend="fft-xla")``.
 
-    Args:
-      x: input feature maps, (B, C, H, W).
-      k: kernels, (C', C, kh, kw) with kh, kw <= delta.
-      padding: int or (ph, pw) zero padding.
-      delta: FFT tile size (paper uses 16).
-      three_m: use the 3-matmul complex product (else 4M).
-    Returns:
-      (B, C', Ho, Wo) with Ho = H + 2*ph - kh + 1.
+    FFT-based 2-D convolution (cross-correlation), differentiable.
+    Thin shim over the plan API with the old signature.
     """
-    return _fft_conv2d(x, k, padding, delta, three_m)
+    warnings.warn(
+        "fft_conv2d is deprecated; use repro.conv.plan_conv(x.shape, "
+        "k.shape, backend='fft-xla') and call the plan",
+        DeprecationWarning, stacklevel=2)
+    from repro.conv import plan_conv
+    plan = plan_conv(tuple(x.shape), tuple(k.shape), padding=padding,
+                     delta=delta, backend="fft-xla", three_m=three_m)
+    return plan(x, k)
 
 
 def fft_conv2d_pallas(x, k, *, padding=0, delta=16, three_m: bool = True,
                       bm=None, bn=None, bk=None):
-    """fft_conv2d with the hot CGEMM running through the Pallas TPU kernel
+    """Deprecated: use ``repro.conv.plan_conv(..., backend="fft-pallas")``.
+
+    fft_conv2d with the hot CGEMM running through the Pallas TPU kernel
     (kernels/cgemm; interpret mode on CPU). Inference path — no custom VJP.
     """
-    from repro.kernels.cgemm import cgemm_pallas
-    spec = make_spec(x.shape, k.shape, padding, delta)
-    mm = functools.partial(cgemm_pallas, three_m=three_m, bm=bm, bn=bn,
-                           bk=bk)
-    return _fft_conv2d_impl(x, k, spec, three_m, cgemm_fn=mm)
+    warnings.warn(
+        "fft_conv2d_pallas is deprecated; use repro.conv.plan_conv(x.shape,"
+        " k.shape, backend='fft-pallas', bm=..., bn=..., bk=...) and call "
+        "the plan", DeprecationWarning, stacklevel=2)
+    from repro.conv import plan_conv
+    plan = plan_conv(tuple(x.shape), tuple(k.shape), padding=padding,
+                     delta=delta, backend="fft-pallas", three_m=three_m,
+                     bm=bm, bn=bn, bk=bk)
+    return plan(x, k)

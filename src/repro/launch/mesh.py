@@ -4,6 +4,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh
+
 
 def _mk(shape, axes):
     n = 1
@@ -16,9 +18,7 @@ def _mk(shape, axes):
             "dry-run entrypoint must set "
             "XLA_FLAGS=--xla_force_host_platform_device_count before any "
             "jax import")
-    return jax.make_mesh(
-        shape, axes, devices=devs[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, devices=devs[:n])
 
 
 def make_production_mesh(*, multi_pod: bool = False):

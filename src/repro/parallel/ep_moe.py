@@ -113,12 +113,12 @@ def moe_forward_ep(p, x, cfg: ModelConfig, mesh, *, model_axis="model"):
 
     b_ax = dp if B % dp_size == 0 else None
     s_ax = model_axis if S % n_ranks == 0 else None
-    out = jax.shard_map(
+    from repro.compat import shard_map
+    out = shard_map(
         wrapped, mesh=mesh,
         in_specs=(P(), P(model_axis, None, None), P(model_axis, None, None),
                   P(model_axis, None, None), P(b_ax, s_ax, None)),
         out_specs=P(b_ax, s_ax, None),
-        check_vma=False,
     )(p["w_gate_router"], p["w1"], p["w2"], p["w3"], x)
     if cfg.n_shared:
         from repro.models.layers import mlp_forward

@@ -25,16 +25,16 @@ conv1.1's C=3); padded channels multiply zeros and are sliced away.
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.conv_spec import ConvSpec
 from repro.core import fftconv as F
 from repro.core.cgemm import cgemm
-
-shard_map = jax.shard_map
 
 
 def _pad_axis(x, axis, mult):
@@ -108,10 +108,12 @@ def _nfft_local(x, k, spec: ConvSpec, n_model: int, model_axis: str,
     Zi = jax.lax.all_to_all(Zi, model_axis, 2, 0, tiled=True)
     Zr, Zi = Zr.astype(jnp.float32), Zi.astype(jnp.float32)
 
-    # Stage 4: local inverse transform of the C'_loc output slab.
-    sp4 = _local_spec(spec, b_loc, c_full, co_full // n_model
-                      if not replicate_kernel_transform
-                      else co_full // n_model)
+    # Stage 4: local inverse transform of the C'_loc output slab. After
+    # boundary a2a #3 each model rank holds a C'_full/N output-channel
+    # slice in BOTH paths: the non-replicated path re-gathers the C'_loc
+    # slabs it contracted, and the replicated path splits its full-C' Z
+    # across ranks — so the local Cout is co_full // n_model either way.
+    sp4 = _local_spec(spec, b_loc, c_full, co_full // n_model)
     return F.output_inverse(Zr, Zi, sp4)
 
 
@@ -143,12 +145,15 @@ def _wfft_local(x, k, spec: ConvSpec, n_model: int, model_axis: str,
     return F.output_inverse(Zr, Zi, sp4)
 
 
-def fft_conv2d_sharded(x, k, mesh, *, strategy: str = "nfft",
-                       padding=0, delta: int = 16, three_m: bool = True,
-                       data_axis: str = "data", model_axis: str = "model",
-                       cgemm_fn=None, replicate_kernel_transform=False,
-                       compute_dtype=None):
-    """Distributed FFT convolution.
+def _fft_conv2d_sharded_impl(x, k, mesh, *, strategy: str = "nfft",
+                             padding=0, delta: int = 16,
+                             three_m: bool = True,
+                             data_axis: str = "data",
+                             model_axis: str = "model",
+                             cgemm_fn=None,
+                             replicate_kernel_transform=False,
+                             compute_dtype=None):
+    """Distributed FFT convolution (execution body of the sharded plans).
 
     Args:
       x: (B, C, H, W) global input; sharded (data, model, -, -).
@@ -190,6 +195,36 @@ def fft_conv2d_sharded(x, k, mesh, *, strategy: str = "nfft",
                     P(None, model_axis, None, None))        # k: C sharded
     out_spec = P(data_axis, model_axis, None, None)
 
-    y = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_spec,
-                  check_vma=False)(xp, kp)
+    y = shard_map(body, mesh=mesh, in_specs=in_specs,
+                  out_specs=out_spec)(xp, kp)
     return y[:B, :Cout]
+
+
+def fft_conv2d_sharded(x, k, mesh, *, strategy: str = "nfft",
+                       padding=0, delta: int = 16, three_m: bool = True,
+                       data_axis: str = "data", model_axis: str = "model",
+                       cgemm_fn=None, replicate_kernel_transform=False,
+                       compute_dtype=None):
+    """Deprecated: use ``repro.conv.plan_conv(..., mesh=..., schedule=...)``.
+
+    Thin shim over the plan API with the old signature and semantics.
+    """
+    warnings.warn(
+        "fft_conv2d_sharded is deprecated; use repro.conv.plan_conv("
+        "x.shape, k.shape, mesh=mesh, schedule='nfft'|'wfft') and call "
+        "the plan", DeprecationWarning, stacklevel=2)
+    if cgemm_fn is not None:
+        # custom CGEMM closures can't be plan-cached; run the body directly
+        return _fft_conv2d_sharded_impl(
+            x, k, mesh, strategy=strategy, padding=padding, delta=delta,
+            three_m=three_m, data_axis=data_axis, model_axis=model_axis,
+            cgemm_fn=cgemm_fn,
+            replicate_kernel_transform=replicate_kernel_transform,
+            compute_dtype=compute_dtype)
+    from repro.conv import plan_conv
+    plan = plan_conv(tuple(x.shape), tuple(k.shape), padding=padding,
+                     delta=delta, backend="fft-xla", schedule=strategy,
+                     mesh=mesh, three_m=three_m, data_axis=data_axis,
+                     model_axis=model_axis, compute_dtype=compute_dtype,
+                     replicate_kernel_transform=replicate_kernel_transform)
+    return plan(x, k)

@@ -1,7 +1,19 @@
 import os
 import sys
 
+import pytest
+
 # NOTE: per the dry-run contract, tests run on the REAL single CPU device —
 # XLA_FLAGS device-count forcing happens only in subprocess-based tests and
 # in repro.launch.dryrun itself.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# hypothesis is an optional test extra: property tests skip without it.
+try:
+    import hypothesis  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+requires_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed")

@@ -1,0 +1,251 @@
+"""Plan/execute conv engine: cache semantics, registry validation,
+(backend, schedule) equivalence grid, and the cost-model auto crossover."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compat import make_mesh
+from repro.conv import (
+    plan_conv, conv2d, plan_cache_info, clear_plan_cache,
+    available_backends, available_schedules, register_backend,
+)
+from repro.core import conv2d_direct
+
+
+def _rand(shape, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(shape),
+                       jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Plan cache
+# --------------------------------------------------------------------------
+
+def test_plan_cache_hit_and_reuse():
+    clear_plan_cache()
+    p1 = plan_conv((2, 3, 16, 16), (4, 3, 3, 3), padding=1)
+    info = plan_cache_info()
+    assert info.misses == 1 and info.hits == 0 and info.size == 1
+    p2 = plan_conv((2, 3, 16, 16), (4, 3, 3, 3), padding=1)
+    assert p2 is p1                       # same frozen object, not a copy
+    assert plan_cache_info().hits == 1
+    # different geometry -> different plan, new cache entry
+    p3 = plan_conv((2, 3, 16, 16), (4, 3, 5, 5), padding=1)
+    assert p3 is not p1
+    assert plan_cache_info() == (1, 2, 2)
+    # padding normalization: int 1 and (1, 1) share a key
+    p4 = plan_conv((2, 3, 16, 16), (4, 3, 3, 3), padding=(1, 1))
+    assert p4 is p1
+    # cache=False bypasses
+    p5 = plan_conv((2, 3, 16, 16), (4, 3, 3, 3), padding=1, cache=False)
+    assert p5 is not p1 and p5 == p1
+    clear_plan_cache()
+    assert plan_cache_info() == (0, 0, 0)
+
+
+# --------------------------------------------------------------------------
+# Registry validation
+# --------------------------------------------------------------------------
+
+def test_registry_rejects_unknown_names():
+    with pytest.raises(ValueError, match="unknown conv backend"):
+        plan_conv((1, 2, 8, 8), (2, 2, 3, 3), backend="nope")
+    with pytest.raises(ValueError, match="unknown conv schedule"):
+        plan_conv((1, 2, 8, 8), (2, 2, 3, 3), schedule="nope")
+
+
+def test_registry_validates_combinations():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="requires a mesh"):
+        plan_conv((1, 2, 8, 8), (2, 2, 3, 3), schedule="nfft")
+    with pytest.raises(ValueError, match="ignores the mesh"):
+        plan_conv((1, 2, 8, 8), (2, 2, 3, 3), schedule="local", mesh=mesh)
+    with pytest.raises(ValueError, match="does not support schedule"):
+        plan_conv((1, 2, 8, 8), (2, 2, 3, 3), backend="direct",
+                  schedule="nfft", mesh=mesh)
+    with pytest.raises(ValueError, match="channel mismatch"):
+        plan_conv((1, 2, 8, 8), (2, 3, 3, 3))
+    with pytest.raises(ValueError, match="no axis"):
+        plan_conv((1, 2, 8, 8), (2, 2, 3, 3), schedule="nfft", mesh=mesh,
+                  model_axis="tensor")
+
+
+def test_registry_accepts_custom_backend():
+    calls = []
+
+    def _exec(plan, x, k):
+        calls.append(plan.backend)
+        return conv2d_direct(x, k, padding=plan.padding)
+
+    register_backend("test-direct", _exec, schedules=("local",))
+    assert "test-direct" in available_backends()
+    x, k = _rand((1, 2, 8, 8), 1), _rand((2, 2, 3, 3), 2)
+    y = plan_conv(x.shape, k.shape, padding=1, backend="test-direct")(x, k)
+    assert calls == ["test-direct"]
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(conv2d_direct(x, k, padding=1)))
+
+
+def test_plan_rejects_mismatched_shapes():
+    plan = plan_conv((2, 3, 16, 16), (4, 3, 3, 3), padding=1)
+    x, k = _rand((2, 3, 16, 16)), _rand((4, 3, 3, 3))
+    with pytest.raises(ValueError, match="plan was built for input"):
+        plan(x[:1], k)
+    with pytest.raises(ValueError, match="plan was built for kernel"):
+        plan(x, k[:2])
+
+
+# --------------------------------------------------------------------------
+# (backend, schedule) equivalence grid vs the direct oracle
+# --------------------------------------------------------------------------
+
+CASES = [
+    # B, C, Co, H, W, kh, kw, pad, delta
+    (2, 3, 4, 20, 20, 3, 3, 1, 16),
+    (1, 4, 2, 17, 23, 5, 5, 2, 16),
+    (2, 2, 2, 12, 12, 3, 3, 1, 8),
+]
+LOCAL_PAIRS = [("direct", "local"), ("fft-xla", "local"),
+               ("fft-pallas", "local")]
+SHARDED_PAIRS = [("fft-xla", "nfft"), ("fft-xla", "wfft"),
+                 ("fft-pallas", "nfft"), ("fft-pallas", "wfft")]
+
+
+@pytest.mark.parametrize("backend,schedule", LOCAL_PAIRS + SHARDED_PAIRS)
+@pytest.mark.parametrize("case", CASES, ids=lambda c: "x".join(map(str, c)))
+def test_backend_schedule_equivalence(backend, schedule, case):
+    B, C, Co, H, W, kh, kw, pad, delta = case
+    x, k = _rand((B, C, H, W), 1), _rand((Co, C, kh, kw), 2)
+    kwargs = dict(padding=pad, delta=delta, backend=backend,
+                  schedule=schedule)
+    if schedule != "local":
+        # degenerate 1x1 mesh: same collective program, single real device
+        kwargs["mesh"] = make_mesh((1, 1), ("data", "model"))
+    y = plan_conv(x.shape, k.shape, **kwargs)(x, k)
+    y0 = conv2d_direct(x, k, padding=pad)
+    assert y.shape == y0.shape
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_asymmetric_padding_all_backends():
+    """(pad_h, pad_w) means symmetric-per-axis everywhere (regression:
+    conv2d_direct used to read it as lax (lo, hi) on both dims)."""
+    x, k = _rand((1, 2, 10, 10), 11), _rand((2, 2, 3, 3), 12)
+    plans = [plan_conv(x.shape, k.shape, padding=(1, 2), backend=be)
+             for be in ("direct", "fft-xla", "fft-pallas")]
+    ys = [np.asarray(p(x, k)) for p in plans]
+    assert all(p.out_shape == (1, 2, 10, 12) for p in plans)
+    for y in ys:
+        assert y.shape == (1, 2, 10, 12)
+        np.testing.assert_allclose(y, ys[0], rtol=3e-4, atol=3e-4)
+
+
+def test_replicate_kernel_transform_single_device():
+    x, k = _rand((2, 3, 14, 14), 3), _rand((4, 3, 3, 3), 4)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    plan = plan_conv(x.shape, k.shape, padding=1, schedule="nfft", mesh=mesh,
+                     replicate_kernel_transform=True)
+    np.testing.assert_allclose(
+        np.asarray(plan(x, k)),
+        np.asarray(conv2d_direct(x, k, padding=1)), rtol=3e-4, atol=3e-4)
+
+
+# --------------------------------------------------------------------------
+# Auto selection (cost-model crossover) and plan metadata
+# --------------------------------------------------------------------------
+
+def test_auto_backend_crossover():
+    # tiny 1x1 kernel: transforms dwarf the direct cost -> direct
+    small = plan_conv((1, 3, 16, 16), (4, 3, 1, 1))
+    assert small.backend == "direct"
+    assert small.spec.direct_flops() <= \
+        small.spec.cgemm_flops(three_m=True) + small.spec.transform_flops()
+    # VGG-scale 3x3 layer: FFT path is cheaper -> fft-xla
+    big = plan_conv((4, 128, 56, 56), (128, 128, 3, 3), padding=1)
+    assert big.backend == "fft-xla"
+    assert big.spec.direct_flops() > \
+        big.spec.cgemm_flops(three_m=True) + big.spec.transform_flops()
+    # both execute correctly through whatever auto picked
+    for plan, seed in ((small, 5), (big, 7)):
+        x = _rand(plan.x_shape, seed)
+        k = _rand(plan.k_shape, seed + 1)
+        np.testing.assert_allclose(
+            np.asarray(plan(x, k)),
+            np.asarray(conv2d_direct(x, k, padding=plan.padding)),
+            rtol=2e-3, atol=2e-3)
+
+
+def test_oversize_kernel_routes_to_direct():
+    """Kernels larger than delta are FFT-impossible but fine directly."""
+    plan = plan_conv((1, 2, 32, 32), (3, 2, 17, 17), delta=16)
+    assert plan.backend == "direct"
+    x, k = _rand(plan.x_shape, 15), _rand(plan.k_shape, 16)
+    np.testing.assert_allclose(
+        np.asarray(plan(x, k)), np.asarray(conv2d_direct(x, k)),
+        rtol=3e-4, atol=3e-4)
+    with pytest.raises(ValueError, match="exceeds tile size"):
+        plan_conv((1, 2, 32, 32), (3, 2, 17, 17), delta=16,
+                  backend="fft-xla")
+
+
+def test_auto_schedule_follows_mesh():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    assert plan_conv((1, 2, 8, 8), (2, 2, 3, 3)).schedule == "local"
+    assert plan_conv((1, 2, 8, 8), (2, 2, 3, 3),
+                     mesh=mesh).schedule == "nfft"
+
+
+def test_plan_metadata_and_flops():
+    plan = plan_conv((2, 8, 20, 20), (4, 8, 3, 3), padding=1,
+                     backend="fft-xla")
+    assert plan.out_shape == (2, 4, 20, 20)
+    assert plan.differentiable
+    assert plan.flops() == plan.spec.cgemm_flops(three_m=True) \
+        + plan.spec.transform_flops()
+    direct = plan_conv((2, 8, 20, 20), (4, 8, 3, 3), padding=1,
+                       backend="direct")
+    assert direct.flops() == direct.spec.direct_flops()
+    assert "backend=fft-xla" in plan.describe()
+    pallas = plan_conv((2, 8, 20, 20), (4, 8, 3, 3), padding=1,
+                       backend="fft-pallas")
+    assert not pallas.differentiable
+
+
+def test_plan_gradients_match_direct():
+    x, k = _rand((2, 3, 12, 12), 5), _rand((4, 3, 3, 3), 6)
+    plan = plan_conv(x.shape, k.shape, padding=1, backend="fft-xla")
+
+    def loss(f):
+        return lambda x, k: jnp.sum(jnp.sin(f(x, k)))
+
+    g1 = jax.grad(loss(plan), argnums=(0, 1))(x, k)
+    g0 = jax.grad(loss(lambda x, k: conv2d_direct(x, k, padding=1)),
+                  argnums=(0, 1))(x, k)
+    for a, b in zip(g1, g0):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-4, atol=3e-4)
+
+
+def test_conv2d_one_shot_uses_cache():
+    clear_plan_cache()
+    x, k = _rand((1, 2, 10, 10), 7), _rand((2, 2, 3, 3), 8)
+    y1 = conv2d(x, k, padding=1, backend="fft-xla")
+    y2 = conv2d(x, k, padding=1, backend="fft-xla")
+    assert plan_cache_info().hits >= 1
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2))
+    np.testing.assert_allclose(
+        np.asarray(y1), np.asarray(conv2d_direct(x, k, padding=1)),
+        rtol=2e-4, atol=2e-4)
+
+
+def test_plans_jit_and_registry_listing():
+    assert {"direct", "fft-xla", "fft-pallas"} <= set(available_backends())
+    assert {"local", "nfft", "wfft"} <= set(available_schedules())
+    x, k = _rand((1, 2, 12, 12), 9), _rand((3, 2, 3, 3), 10)
+    plan = plan_conv(x.shape, k.shape, padding=1, backend="fft-xla")
+    y = jax.jit(plan)(x, k)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(conv2d_direct(x, k, padding=1)),
+        rtol=2e-4, atol=2e-4)

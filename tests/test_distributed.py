@@ -10,17 +10,17 @@ _SCRIPT_NFFT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np, re
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
-from repro.parallel import fft_conv2d_sharded
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
+from repro.conv import plan_conv
 from repro.core import conv2d_direct
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.standard_normal((4, 8, 28, 28)), jnp.float32)
 k = jnp.asarray(rng.standard_normal((8, 8, 3, 3)), jnp.float32)
 y0 = conv2d_direct(x, k, padding=1)
 for strat in ("nfft", "wfft"):
-    f = jax.jit(lambda a, b: fft_conv2d_sharded(a, b, mesh, strategy=strat,
-                                                padding=1))
+    f = jax.jit(plan_conv(x.shape, k.shape, schedule=strat, mesh=mesh,
+                          padding=1))
     y = f(x, k)
     err = float(jnp.max(jnp.abs(y - y0))) / float(jnp.max(jnp.abs(y0)))
     assert err < 1e-4, (strat, err)
@@ -33,6 +33,25 @@ for strat in ("nfft", "wfft"):
                                            "collective-free", kinds)
     else:
         assert "all-reduce" in kinds, kinds
+# Regression for the replicate_kernel_transform stage-4 Cout (previously a
+# dead conditional): with n_model=4 > 1 the replicated path must still
+# invert a C'/N output slab per rank and match the oracle.
+f = jax.jit(plan_conv(x.shape, k.shape, schedule="nfft", mesh=mesh,
+                      padding=1, replicate_kernel_transform=True))
+y = f(x, k)
+err = float(jnp.max(jnp.abs(y - y0))) / float(jnp.max(jnp.abs(y0)))
+assert err < 1e-4, ("nfft_repG", err)
+hlo = f.lower(x, k).compile().as_text()
+assert "all-reduce" not in hlo, "repG must not introduce an all-reduce"
+# deprecated shim still routes through the same plans
+import warnings
+from repro.parallel import fft_conv2d_sharded
+with warnings.catch_warnings():
+    warnings.simplefilter("ignore", DeprecationWarning)
+    y = jax.jit(lambda a, b: fft_conv2d_sharded(a, b, mesh, strategy="nfft",
+                                                padding=1))(x, k)
+err = float(jnp.max(jnp.abs(y - y0))) / float(jnp.max(jnp.abs(y0)))
+assert err < 1e-4, ("shim", err)
 print("DIST_OK")
 """
 
@@ -41,8 +60,8 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 from repro.configs import get_config
 from repro.optim import AdamWConfig
 from repro.train import make_train_step, init_train_state

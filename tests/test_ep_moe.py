@@ -11,8 +11,8 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import dataclasses, re
 import jax, jax.numpy as jnp
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 from repro.configs import get_config
 from repro.models import layers as L
 from repro.parallel.ep_moe import moe_forward_ep

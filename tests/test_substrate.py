@@ -7,7 +7,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import HAVE_HYPOTHESIS, requires_hypothesis
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.data import DataConfig, lm_batch, image_batch
@@ -46,15 +50,21 @@ def test_grad_clip_caps_update():
     assert float(m["grad_norm"]) == pytest.approx(200.0, rel=1e-4)
 
 
-@settings(max_examples=20, deadline=None)
-@given(step=st.integers(0, 9999))
-def test_cosine_schedule_bounds(step):
-    cfg = AdamWConfig(lr=1e-3, warmup_steps=100, total_steps=10000,
-                      min_lr_frac=0.1)
-    lr = float(cosine_lr(cfg, jnp.int32(step)))
-    assert 0.0 <= lr <= cfg.lr * (1 + 1e-6)
-    if step >= cfg.warmup_steps:
-        assert lr >= cfg.lr * cfg.min_lr_frac * (1 - 1e-6)
+if HAVE_HYPOTHESIS:
+    @requires_hypothesis
+    @settings(max_examples=20, deadline=None)
+    @given(step=st.integers(0, 9999))
+    def test_cosine_schedule_bounds(step):
+        cfg = AdamWConfig(lr=1e-3, warmup_steps=100, total_steps=10000,
+                          min_lr_frac=0.1)
+        lr = float(cosine_lr(cfg, jnp.int32(step)))
+        assert 0.0 <= lr <= cfg.lr * (1 + 1e-6)
+        if step >= cfg.warmup_steps:
+            assert lr >= cfg.lr * cfg.min_lr_frac * (1 - 1e-6)
+else:
+    @requires_hypothesis
+    def test_cosine_schedule_bounds():
+        pass
 
 
 def test_cross_entropy_reference():
@@ -82,13 +92,19 @@ def test_data_deterministic_and_seekable():
                               np.asarray(b3["tokens"]))
 
 
-@settings(max_examples=10, deadline=None)
-@given(step=st.integers(0, 10000), seed=st.integers(0, 100))
-def test_data_tokens_in_range(step, seed):
-    dc = DataConfig(vocab=64, seq_len=9, global_batch=2, seed=seed)
-    b = lm_batch(dc, step)
-    t = np.asarray(b["tokens"])
-    assert t.min() >= 0 and t.max() < 64
+if HAVE_HYPOTHESIS:
+    @requires_hypothesis
+    @settings(max_examples=10, deadline=None)
+    @given(step=st.integers(0, 10000), seed=st.integers(0, 100))
+    def test_data_tokens_in_range(step, seed):
+        dc = DataConfig(vocab=64, seq_len=9, global_batch=2, seed=seed)
+        b = lm_batch(dc, step)
+        t = np.asarray(b["tokens"])
+        assert t.min() >= 0 and t.max() < 64
+else:
+    @requires_hypothesis
+    def test_data_tokens_in_range():
+        pass
 
 
 # --------------------------------------------------------------------------
