@@ -37,10 +37,17 @@ tiny = plan_conv((1, 3, 16, 16), (4, 3, 1, 1))
 print(f"auto backend for a 1x1-kernel layer: {tiny.backend} "
       f"(vs {plan.backend} for the VGG layer)")
 
-# Plans are differentiable where the underlying path is (custom VJP).
+# Plans are differentiable on every backend x schedule (plan-level VJP).
 def loss(k):
     return jnp.mean((plan(x, k) - y_ref) ** 2)
 
 g = jax.grad(loss)(k)
 print("grad norm through the plan:", float(jnp.linalg.norm(g)))
 print("plan cache:", plan_cache_info())
+
+# Serving: prepare once (the kernel transform is cached under a weights
+# version), then every call runs stages 1/3/4 only.
+prepared = plan.prepare(k, weights_version=0)
+y_prep = prepared(x)
+print("prepared exec matches one-shot:",
+      bool(jnp.allclose(y_prep, y_fft, atol=1e-5)))

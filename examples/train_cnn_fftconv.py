@@ -1,6 +1,7 @@
 """End-to-end driver #1: train a small CNN whose conv layers run through
-the paper's FFT-based convolution (custom VJP) via the plan/execute API,
-on synthetic images.
+the paper's FFT-based convolution (plan-level VJP) via the plan/execute
+API, on synthetic images — then evaluate through *prepared* plans (the
+kernel transforms of the trained weights are cached once and reused).
 
     PYTHONPATH=src python examples/train_cnn_fftconv.py --steps 60
 """
@@ -11,8 +12,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.conv import plan_conv
+from repro.conv import prepared_cache_info
 from repro.data import DataConfig, image_batch
+from repro.models.layers import conv2d_planned
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 
 
@@ -27,16 +29,21 @@ def init_params(key):
     }
 
 
-def _conv(x, k):
+def _conv(x, k, *, weights_version=None):
     # plan_conv is cached by shape: each layer geometry plans exactly once.
-    return plan_conv(x.shape, k.shape, padding=1, backend="fft-xla")(x, k)
+    # During training the plan-level VJP differentiates x AND k; at eval a
+    # weights_version routes through a prepared plan (stage 2 cached).
+    return conv2d_planned(x, k, padding=1, backend="fft-xla",
+                          weights_version=weights_version)
 
 
-def forward(p, x):
-    h = jax.nn.relu(_conv(x, p["c1"]))                          # 32x32
+def forward(p, x, *, weights_version=None):
+    h = jax.nn.relu(_conv(x, p["c1"],
+                          weights_version=weights_version))     # 32x32
     h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
                               (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
-    h = jax.nn.relu(_conv(h, p["c2"]))                          # 16x16
+    h = jax.nn.relu(_conv(h, p["c2"],
+                          weights_version=weights_version))     # 16x16
     h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
                               (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
     h = h.reshape(h.shape[0], -1)                               # 8x8x32
@@ -73,11 +80,18 @@ def main():
         params, opt, loss = step(params, opt, b["images"], b["labels"])
         if i % 10 == 0 or i == args.steps - 1:
             print(f"step {i:4d} loss {float(loss):.4f}")
+    # Eval through prepared plans: the trained kernels' transforms are
+    # computed once (keyed by the final step as weights_version) and every
+    # eval batch skips stage 2.
     b = image_batch(dc, 10_000)
-    acc = float(jnp.mean(jnp.argmax(forward(params, b["images"]), -1)
-                         == b["labels"]))
-    print(f"held-out acc {acc:.2f} ({time.time()-t0:.1f}s) — "
-          "conv layers ran through ConvPlan(fft-xla) fwd+bwd")
+    logits = forward(params, b["images"], weights_version=args.steps)
+    acc = float(jnp.mean(jnp.argmax(logits, -1) == b["labels"]))
+    forward(params, b["images"], weights_version=args.steps)  # cache hits
+    info = prepared_cache_info()
+    print(f"held-out acc {acc:.2f} ({time.time()-t0:.1f}s) — trained via "
+          "the plan-level VJP, evaluated via prepared plans "
+          f"(prepared cache: {info.hits} hits / {info.misses} misses)")
+    assert info.hits >= 2, "second eval pass should reuse prepared kernels"
     assert float(loss) < 2.5, "training through FFT conv failed to learn"
 
 

@@ -13,15 +13,20 @@ from repro.conv.registry import (
     get_backend, get_schedule, available_backends, available_schedules,
 )
 from repro.conv.plan import (
-    ConvPlan, plan_conv, conv2d, plan_cache_info, clear_plan_cache,
+    ConvPlan, PreparedConv, plan_conv, conv2d,
+    plan_cache_info, clear_plan_cache, plan_cache_capacity,
+    prepared_cache_info, clear_prepared_cache,
 )
+from repro.conv.stages import stage_counts, reset_stage_counts
 from repro.conv import backends as _backends
 
 _backends.register_builtin()
 
 __all__ = [
-    "ConvPlan", "plan_conv", "conv2d",
-    "plan_cache_info", "clear_plan_cache",
+    "ConvPlan", "PreparedConv", "plan_conv", "conv2d",
+    "plan_cache_info", "clear_plan_cache", "plan_cache_capacity",
+    "prepared_cache_info", "clear_prepared_cache",
+    "stage_counts", "reset_stage_counts",
     "BackendInfo", "ScheduleInfo",
     "register_backend", "register_schedule",
     "get_backend", "get_schedule",

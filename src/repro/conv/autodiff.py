@@ -1,0 +1,117 @@
+"""Plan-level reverse-mode autodiff for the stage-graph conv engine.
+
+Differentiability is a property of the *plan*, not of one backend's
+implementation: every backend that executes through a stage pipeline gets
+the same custom VJP, defined once here over the whole pipeline —
+
+  dx : a *transposed* plan (same backend, schedule, mesh and precision as
+       the forward) applied to dy and the spatially-flipped,
+       channel-transposed kernel, "full"-correlation padding, cropped by
+       the forward padding;
+  dk : direct correlation of x with dy, batch as the contraction axis
+       (dy's spatial extent exceeds the FFT tile, so the direct path is
+       the right algorithm — one oracle call).
+
+Because the backward pass is expressed as plans, it runs through the same
+schedules as the forward: the gradient of an ``nfft`` conv is itself an
+``nfft`` conv (collectives and all), which is what makes training *through*
+the NUMA-aware schedule possible.  The Pallas backend is shielded by the
+VJP (its kernel is never differentiated through), so ``fft-pallas`` trains
+too.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def pipeline_conv(plan, x, k):
+    """Differentiable execution of a stage-pipeline plan."""
+    return _pipeline(plan).full(plan, x, k)
+
+
+def _pipeline(plan):
+    from repro.conv import registry
+    return registry.get_backend(plan.backend).make_pipeline(plan)
+
+
+def _transposed_plan(plan):
+    """The plan computing dx: conv of dy (B, C', Ho, Wo) with the flipped,
+    transposed kernel (C, C', kh, kw) at full-correlation padding, on the
+    same backend x schedule (and mesh/precision knobs) as the forward."""
+    from repro.conv.plan import plan_conv
+    s = plan.spec
+    return plan_conv(
+        (s.B, s.Cout, s.Ho, s.Wo), (s.C, s.Cout, s.kh, s.kw),
+        padding=(s.kh - 1, s.kw - 1), delta=s.delta, backend=plan.backend,
+        schedule=plan.schedule, mesh=plan.mesh, three_m=plan.three_m,
+        bm=plan.bm, bn=plan.bn, bk=plan.bk,
+        compute_dtype=plan.compute_dtype, data_axis=plan.data_axis,
+        model_axis=plan.model_axis,
+        replicate_kernel_transform=plan.replicate_kernel_transform)
+
+
+def _dx_via_transposed_plan(plan, k, dy):
+    """dx: transposed plan on the flipped/channel-transposed kernel; the
+    recursive pipeline_conv call keeps higher-order grads working."""
+    s, pad = plan.spec, plan.padding
+    kt = jnp.flip(k, axis=(-2, -1)).transpose(1, 0, 2, 3)  # (C, C', kh, kw)
+    dx_full = pipeline_conv(_transposed_plan(plan), dy, kt)
+    return jax.lax.dynamic_slice(
+        dx_full, (0, 0, pad[0], pad[1]), (s.B, s.C, s.H, s.W))
+
+
+def _fwd(plan, x, k):
+    return pipeline_conv(plan, x, k), (x, k)
+
+
+def _bwd(plan, res, dy):
+    x, k = res
+    pad = plan.padding
+    dx = _dx_via_transposed_plan(plan, k, dy)
+    # dk: correlation of x with dy, batch as the contraction axis. The
+    # "kernel" (dy) spatial extent exceeds the tile, so use the direct path.
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad[0], pad[0]), (pad[1], pad[1])))
+    dk = jax.lax.conv_general_dilated(
+        xp.transpose(1, 0, 2, 3),                  # (C, B, Hp, Wp)
+        dy.transpose(1, 0, 2, 3),                  # (C', B, Ho, Wo)
+        window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    ).transpose(1, 0, 2, 3)                        # (C', C, kh, kw)
+    return dx.astype(x.dtype), dk.astype(k.dtype)
+
+
+pipeline_conv.defvjp(_fwd, _bwd)
+
+
+# --------------------------------------------------------------------------
+# Prepared execution: differentiable w.r.t. x on every pipeline backend
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def prepared_conv(prepared, x):
+    """Execute a ``PreparedConv`` with grads w.r.t. ``x`` defined by the
+    same transposed-plan VJP as ``pipeline_conv`` — which also shields the
+    Pallas CGEMM kernel from being differentiated through, so prepared
+    ``fft-pallas`` trains its inputs too.  (The kernel is frozen in a
+    prepared plan; there is no dk.)"""
+    plan = prepared.plan
+    pipeline = _pipeline(plan)
+    return pipeline.execute(plan, x, prepared.state)
+
+
+def _prep_fwd(prepared, x):
+    return prepared_conv(prepared, x), None
+
+
+def _prep_bwd(prepared, _res, dy):
+    plan = prepared.plan
+    dx = _dx_via_transposed_plan(plan, prepared.kernel, dy)
+    # execution returns x.dtype, so dy carries the input dtype
+    return (dx.astype(dy.dtype),)
+
+
+prepared_conv.defvjp(_prep_fwd, _prep_bwd)

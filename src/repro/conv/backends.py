@@ -4,25 +4,32 @@ Schedules:
   local  single device, no collectives.
   nfft   the paper's NUMA-aware tuple partitioning: transforms run where
          the data lives, one all_to_all per stage boundary, collective-free
-         hot CGEMM (repro.parallel.fftconv_dist).
+         hot CGEMM.
   wfft   the Wang et al. baseline: channel-sharded CGEMM with an
          all-reduce inside the hot stage.
 
 Backends:
   direct      lax.conv_general_dilated (the oracle path; wins for small
-              channel counts / tiny kernels by the cost model).
-  fft-xla     the paper's 4-stage FFT convolution with the XLA einsum
-              CGEMM; differentiable (custom VJP) on the local schedule.
-  fft-pallas  same pipeline with the hot CGEMM in the Pallas TPU kernel
-              (interpret mode on CPU); plan bm/bn/bk select its blocks.
+              channel counts / tiny kernels by the cost model).  Opaque
+              execute, native XLA autodiff.
+  fft-xla     the paper's 4-stage pipeline composed from repro.conv.stages
+              with the XLA einsum CGEMM.
+  fft-pallas  the same stage graph with the hot CGEMM swapped for the
+              Pallas TPU kernel (interpret mode on CPU); plan bm/bn/bk
+              select its blocks.
+
+The two FFT backends differ *only* in the CGEMM stage op they inject into
+the pipeline — everything else (transforms, collectives, prepare/execute,
+the plan-level VJP) is shared composition, which is why both are
+differentiable on every schedule.
 """
 from __future__ import annotations
 
 import functools
 
+from repro.conv import stages
 from repro.conv.registry import register_backend, register_schedule
 from repro.core import fftconv as F
-from repro.core.cgemm import cgemm
 
 
 def _pallas_cgemm_fn(plan):
@@ -32,33 +39,16 @@ def _pallas_cgemm_fn(plan):
 
 
 def _exec_direct(plan, x, k):
-    return F.conv2d_direct(x, k, padding=plan.padding)
+    return F.conv2d_direct(x, k, padding=plan.padding,
+                           compute_dtype=plan.compute_dtype)
 
 
-def _exec_fft(plan, x, k, cgemm_fn=None):
-    if plan.schedule == "local":
-        if cgemm_fn is None:
-            # custom-VJP path: differentiable, FFT-conv fwd + bwd
-            return F._fft_conv2d(x, k, plan.padding, plan.spec.delta,
-                                 plan.three_m)
-        return F._fft_conv2d_impl(x, k, plan.spec, plan.three_m,
-                                  cgemm_fn=cgemm_fn)
-    from repro.parallel.fftconv_dist import _fft_conv2d_sharded_impl
-    return _fft_conv2d_sharded_impl(
-        x, k, plan.mesh, strategy=plan.schedule, padding=plan.padding,
-        delta=plan.spec.delta, three_m=plan.three_m,
-        data_axis=plan.data_axis, model_axis=plan.model_axis,
-        cgemm_fn=cgemm_fn,
-        replicate_kernel_transform=plan.replicate_kernel_transform,
-        compute_dtype=plan.compute_dtype)
+def _fft_xla_pipeline(plan):
+    return stages.pipeline_for(plan.schedule, cgemm_fn=None)
 
 
-def _exec_fft_xla(plan, x, k):
-    return _exec_fft(plan, x, k, cgemm_fn=None)
-
-
-def _exec_fft_pallas(plan, x, k):
-    return _exec_fft(plan, x, k, cgemm_fn=_pallas_cgemm_fn(plan))
+def _fft_pallas_pipeline(plan):
+    return stages.pipeline_for(plan.schedule, cgemm_fn=_pallas_cgemm_fn(plan))
 
 
 def register_builtin() -> None:
@@ -71,12 +61,11 @@ def register_builtin() -> None:
                       description="baseline: all-reduce inside the hot CGEMM")
 
     register_backend("direct", _exec_direct, schedules=("local",),
-                     differentiable=("local",),
+                     native_autodiff=True,
                      description="lax.conv_general_dilated")
-    register_backend("fft-xla", _exec_fft_xla,
+    register_backend("fft-xla", pipeline_factory=_fft_xla_pipeline,
                      schedules=("local", "nfft", "wfft"),
-                     differentiable=("local",),
-                     description="FFT conv, XLA einsum CGEMM")
-    register_backend("fft-pallas", _exec_fft_pallas,
+                     description="FFT conv stage graph, XLA einsum CGEMM")
+    register_backend("fft-pallas", pipeline_factory=_fft_pallas_pipeline,
                      schedules=("local", "nfft", "wfft"),
-                     description="FFT conv, Pallas CGEMM kernel")
+                     description="FFT conv stage graph, Pallas CGEMM kernel")

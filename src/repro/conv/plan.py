@@ -10,7 +10,20 @@ wFFT), so selection lives in a planner rather than at call sites:
 ``ConvPlan`` freezes everything the execution needs: the geometry
 (``ConvSpec``), the (backend, schedule) pair, precision, and tuning
 parameters (``three_m``, CGEMM block sizes, mesh axes).  Plans are
-memoized in a keyed cache so repeated layer shapes pay planning once.
+memoized in a keyed LRU cache so repeated layer shapes pay planning once.
+
+On top of the one-shot ``plan(x, k)`` there is a prepare/execute split for
+fixed kernels (inference / serving):
+
+    prepared = plan.prepare(k, weights_version=step)   # stage 2 runs here
+    y = prepared(x)                                    # stage 2 never again
+
+``prepare`` caches the transformed kernel ``G`` in the exact layout the
+schedule consumes — for ``nfft`` the post-all-to-all P-slab form, so
+prepared sharded execution runs the kernel transform AND boundary
+all-to-all #2 zero times.  The cache is keyed by ``weights_version``:
+prepare with a new version recomputes (invalidation), with the same
+version returns the cached ``PreparedConv``.
 
 ``backend="auto"`` picks direct vs FFT from the ``ConvSpec`` cost model;
 ``schedule="auto"`` picks ``nfft`` when a mesh is given, else ``local``.
@@ -19,11 +32,13 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 import threading
 from typing import Any, Optional
 
 from repro.core.conv_spec import ConvSpec
 from repro.conv import registry
+from repro.conv import autodiff
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,15 +65,80 @@ class ConvPlan:
 
     # ---- execution --------------------------------------------------------
     def __call__(self, x, k):
-        if tuple(x.shape) != self.x_shape:
-            raise ValueError(
-                f"plan was built for input {self.x_shape}, got "
-                f"{tuple(x.shape)}; call plan_conv for the new geometry")
+        self._check_x(x)
         if tuple(k.shape) != self.k_shape:
             raise ValueError(
                 f"plan was built for kernel {self.k_shape}, got "
                 f"{tuple(k.shape)}; call plan_conv for the new geometry")
-        return registry.get_backend(self.backend).execute(self, x, k)
+        be = registry.get_backend(self.backend)
+        if be.pipeline_factory is not None:
+            return autodiff.pipeline_conv(self, x, k)
+        return be.execute(self, x, k)
+
+    def _check_x(self, x):
+        if tuple(x.shape) != self.x_shape:
+            raise ValueError(
+                f"plan was built for input {self.x_shape}, got "
+                f"{tuple(x.shape)}; call plan_conv for the new geometry")
+
+    # ---- prepare/execute split --------------------------------------------
+    def prepare(self, k, *, weights_version=None) -> "PreparedConv":
+        """Run the kernel transform (stage 2) once; return a ``PreparedConv``
+        executing the remaining stages against the cached result.
+
+        The prepared cache is keyed by (plan, kernel object): each layer's
+        kernel gets its own entry even when same-geometry layers share a
+        plan.  ``weights_version`` is the staleness check — preparing the
+        same kernel under the same version returns the memoized
+        ``PreparedConv`` without re-transforming; a different version
+        recomputes and replaces it (weight update -> invalidation).
+        ``None`` always recomputes and is never cached.  Call outside
+        ``jit`` — the transform runs eagerly here so execution never
+        re-traces it.
+        """
+        if tuple(k.shape) != self.k_shape:
+            raise ValueError(
+                f"plan was built for kernel {self.k_shape}, got "
+                f"{tuple(k.shape)}; call plan_conv for the new geometry")
+        import jax
+        if isinstance(k, jax.core.Tracer):
+            raise ValueError(
+                "plan.prepare must run outside jit/grad (it caches the "
+                "concrete transformed kernel); prepare eagerly and close "
+                "over the PreparedConv, or use plan(x, k) when k is traced")
+        global _prepared_hits, _prepared_misses, _prepared_invalidations
+        # Key by (plan, kernel object): same-geometry layers share one
+        # ConvPlan, so the plan alone would hand layer B layer A's cached
+        # transform.  The PreparedConv pins k, so id(k) is unambiguous for
+        # as long as its entry lives.
+        cache_key = (self, id(k))
+        if weights_version is not None:
+            with _prepared_lock:
+                slot = _prepared_cache.get(cache_key)
+                if slot is not None and slot[0] == weights_version:
+                    _prepared_hits += 1
+                    _prepared_cache.move_to_end(cache_key)
+                    return slot[1]
+        be = registry.get_backend(self.backend)
+        if be.pipeline_factory is not None:
+            state = be.make_pipeline(self).prepare(self, k)
+        else:
+            state = k              # opaque backend: nothing to pre-transform
+        prepared = PreparedConv(plan=self, state=state, kernel=k,
+                                weights_version=weights_version)
+        if weights_version is not None:
+            with _prepared_lock:
+                if cache_key in _prepared_cache:
+                    _prepared_invalidations += 1
+                    _prepared_cache.move_to_end(cache_key)
+                _prepared_misses += 1
+                _prepared_cache[cache_key] = (weights_version, prepared)
+                # same LRU bound as the plan cache: prepared G pytrees are
+                # the big arrays, don't let them accumulate unboundedly
+                cap = plan_cache_capacity()
+                while len(_prepared_cache) > cap:
+                    _prepared_cache.popitem(last=False)
+        return prepared
 
     # ---- introspection ----------------------------------------------------
     @property
@@ -108,17 +188,65 @@ class ConvPlan:
         return "\n".join(lines)
 
 
+@dataclasses.dataclass(frozen=True, eq=False)   # identity hash: jit-able
+class PreparedConv:
+    """A plan bound to a prepared (already-transformed) kernel.
+
+    ``prepared(x)`` runs stages 1/3/4 (+ the schedule's remaining
+    collectives); stage 2 and — for ``nfft`` — boundary all-to-all #2 were
+    paid once in ``plan.prepare``.  Pipeline backends are differentiable
+    w.r.t. ``x`` (the plan-level VJP, so ``fft-pallas`` included); the
+    kernel is frozen — to train it, use ``plan(x, k)``.
+    """
+    plan: ConvPlan
+    state: Any                          # pipeline G pytree, or raw k (opaque)
+    kernel: Any = None                  # original k (for the x-grad VJP)
+    weights_version: Any = None
+
+    def __call__(self, x):
+        self.plan._check_x(x)
+        be = registry.get_backend(self.plan.backend)
+        if be.pipeline_factory is not None:
+            return autodiff.prepared_conv(self, x)
+        return be.execute(self.plan, x, self.state)
+
+    @property
+    def out_shape(self) -> tuple:
+        return self.plan.out_shape
+
+
 # --------------------------------------------------------------------------
-# Plan cache
+# Plan cache (bounded LRU) + prepared-kernel cache
 # --------------------------------------------------------------------------
 
 PlanCacheInfo = collections.namedtuple("PlanCacheInfo",
                                        ["hits", "misses", "size"])
+PreparedCacheInfo = collections.namedtuple(
+    "PreparedCacheInfo", ["hits", "misses", "invalidations", "size"])
+
+_DEFAULT_CACHE_SIZE = 256
 
 _cache_lock = threading.Lock()
-_plan_cache: dict = {}
+_plan_cache: "collections.OrderedDict" = collections.OrderedDict()
 _cache_hits = 0
 _cache_misses = 0
+
+_prepared_lock = threading.Lock()
+# plan -> (weights_version, prepared); LRU-bounded like the plan cache
+_prepared_cache: "collections.OrderedDict" = collections.OrderedDict()
+_prepared_hits = 0
+_prepared_misses = 0
+_prepared_invalidations = 0
+
+
+def plan_cache_capacity() -> int:
+    """Max cached plans (env ``REPRO_CONV_PLAN_CACHE_SIZE``, default 256)."""
+    try:
+        cap = int(os.environ.get("REPRO_CONV_PLAN_CACHE_SIZE",
+                                 _DEFAULT_CACHE_SIZE))
+    except ValueError:
+        cap = _DEFAULT_CACHE_SIZE
+    return max(1, cap)
 
 
 def plan_cache_info() -> PlanCacheInfo:
@@ -132,6 +260,31 @@ def clear_plan_cache() -> None:
         _plan_cache.clear()
         _cache_hits = 0
         _cache_misses = 0
+
+
+def prepared_cache_info() -> PreparedCacheInfo:
+    with _prepared_lock:
+        return PreparedCacheInfo(_prepared_hits, _prepared_misses,
+                                 _prepared_invalidations,
+                                 len(_prepared_cache))
+
+
+def clear_prepared_cache() -> None:
+    global _prepared_hits, _prepared_misses, _prepared_invalidations
+    with _prepared_lock:
+        _prepared_cache.clear()
+        _prepared_hits = 0
+        _prepared_misses = 0
+        _prepared_invalidations = 0
+
+
+def _mesh_cache_key(mesh):
+    """Value key for a mesh: two distinct Mesh objects over the same devices
+    and axes share plan-cache entries (object identity would duplicate)."""
+    if mesh is None:
+        return None
+    return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
+            tuple(d.id for d in mesh.devices.flat))
 
 
 # --------------------------------------------------------------------------
@@ -232,29 +385,35 @@ def plan_conv(x_shape, k_shape, *, padding=0, delta: int = 16,
       schedule: ``"local"`` | ``"nfft"`` | ``"wfft"`` | ``"auto"``
         (``nfft`` when a mesh is given, else ``local``).
       mesh: jax Mesh with ``data_axis``/``model_axis``; required by the
-        sharded schedules.
+        sharded schedules.  Cached plans key meshes by value
+        ``(axis_names, shape, device ids)``, so equal meshes share entries.
       three_m: 3-matmul (Karatsuba) vs 4-matmul complex product.
       bm, bn, bk: Pallas CGEMM block sizes (``fft-pallas`` only).
-      compute_dtype: CGEMM operand dtype for sharded schedules (e.g. bf16;
-        f32 accumulation).
+      compute_dtype: CGEMM operand dtype (e.g. bf16; f32 accumulation).
+        On the sharded schedules the cast happens before the hot-path
+        collective (nfft boundary a2a / wfft in-stage psum), halving its
+        bytes.
       replicate_kernel_transform: nfft only — replicate the cheap kernel
         transform on every model rank instead of all-to-all-ing it.
-      cache: memoize the plan under its argument key.
+      cache: memoize the plan under its argument key (bounded LRU, see
+        ``plan_cache_capacity``).
 
     Returns:
-      A frozen ``ConvPlan``; call it as ``plan(x, k)``.
+      A frozen ``ConvPlan``; call it as ``plan(x, k)`` or split with
+      ``plan.prepare(k)``.
     """
     global _cache_hits, _cache_misses
     x_shape, k_shape = tuple(map(int, x_shape)), tuple(map(int, k_shape))
     padding = _normalize_padding(padding)
-    key = (x_shape, k_shape, padding, delta, backend, schedule, mesh,
-           three_m, bm, bn, bk, compute_dtype, data_axis, model_axis,
-           replicate_kernel_transform)
+    key = (x_shape, k_shape, padding, delta, backend, schedule,
+           _mesh_cache_key(mesh), three_m, bm, bn, bk, compute_dtype,
+           data_axis, model_axis, replicate_kernel_transform)
     if cache:
         with _cache_lock:
             plan = _plan_cache.get(key)
             if plan is not None:
                 _cache_hits += 1
+                _plan_cache.move_to_end(key)
                 return plan
     plan = _resolve(x_shape, k_shape, padding, delta, backend, schedule,
                     mesh, three_m, bm, bn, bk, compute_dtype, data_axis,
@@ -263,6 +422,10 @@ def plan_conv(x_shape, k_shape, *, padding=0, delta: int = 16,
         with _cache_lock:
             _cache_misses += 1
             _plan_cache[key] = plan
+            _plan_cache.move_to_end(key)
+            cap = plan_cache_capacity()
+            while len(_plan_cache) > cap:
+                _plan_cache.popitem(last=False)
     return plan
 
 

@@ -7,26 +7,56 @@ paper).  Backends declare which schedules they support; ``plan_conv``
 resolves a (backend, schedule) pair and the plan dispatches through this
 registry at execute time.
 
-Third-party backends register the same way the built-ins do:
+A backend is registered in one of two forms:
 
-    register_backend("my-backend", execute=my_fn, schedules=("local",))
+  * **stage-pipeline** — ``pipeline_factory(plan) -> StagePipeline`` (see
+    ``repro.conv.stages``).  Execution composes the stage graph, the plan
+    gets ``prepare``/execute for free, and the backend is differentiable on
+    *every* schedule it supports via the plan-level VJP
+    (``repro.conv.autodiff``) — its ``differentiable`` set is derived, not
+    declared.
+  * **opaque execute** — ``execute(plan, x, k) -> y``.  Third-party
+    backends register this way:
 
-where ``execute(plan, x, k) -> y`` receives the frozen ``ConvPlan``.
+        register_backend("my-backend", execute=my_fn, schedules=("local",))
+
+    Differentiability is whatever the callable supports: pass
+    ``native_autodiff=True`` if jax can differentiate straight through it
+    (like the built-in ``direct``), or declare an explicit
+    ``differentiable=(...)`` subset.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Optional
 
 
 @dataclasses.dataclass(frozen=True)
 class BackendInfo:
     """A registered convolution backend."""
     name: str
-    execute: Callable          # (plan, x, k) -> (B, C', Ho, Wo)
     schedules: tuple           # schedule names this backend supports
-    differentiable: tuple = () # schedules with working reverse-mode grads
+    execute: Optional[Callable] = None          # (plan, x, k) -> y (opaque)
+    pipeline_factory: Optional[Callable] = None  # (plan) -> StagePipeline
+    native_autodiff: bool = False  # jax differentiates execute directly
+    declared_differentiable: tuple = ()          # opaque backends only
     description: str = ""
+
+    @property
+    def differentiable(self) -> tuple:
+        """Schedules with working reverse-mode grads — *derived*: every
+        stage-pipeline backend gets the plan-level VJP on all its
+        schedules, native-autodiff backends differentiate everywhere they
+        execute, and only opaque backends fall back to their declaration."""
+        if self.pipeline_factory is not None or self.native_autodiff:
+            return self.schedules
+        return self.declared_differentiable
+
+    def make_pipeline(self, plan):
+        if self.pipeline_factory is None:
+            raise ValueError(
+                f"backend {self.name!r} is not a stage-pipeline backend")
+        return self.pipeline_factory(plan)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,16 +79,24 @@ def register_schedule(name: str, *, requires_mesh: bool,
     return info
 
 
-def register_backend(name: str, execute: Callable, *, schedules,
-                     differentiable=(), description: str = "") -> BackendInfo:
+def register_backend(name: str, execute: Optional[Callable] = None, *,
+                     schedules, pipeline_factory: Optional[Callable] = None,
+                     native_autodiff: bool = False, differentiable=(),
+                     description: str = "") -> BackendInfo:
+    if (execute is None) == (pipeline_factory is None):
+        raise ValueError(
+            f"backend {name!r}: register exactly one of execute= or "
+            "pipeline_factory=")
     schedules = tuple(schedules)
     for s in schedules:
         if s not in _SCHEDULES:
             raise ValueError(
                 f"backend {name!r} declares unknown schedule {s!r}; "
                 f"register_schedule it first (known: {available_schedules()})")
-    info = BackendInfo(name=name, execute=execute, schedules=schedules,
-                       differentiable=tuple(differentiable),
+    info = BackendInfo(name=name, schedules=schedules, execute=execute,
+                       pipeline_factory=pipeline_factory,
+                       native_autodiff=native_autodiff,
+                       declared_differentiable=tuple(differentiable),
                        description=description)
     _BACKENDS[name] = info
     return info

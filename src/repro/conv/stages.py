@@ -1,0 +1,362 @@
+"""Composable stage graph for the FFT-convolution engine.
+
+The paper's pipeline is four stage *ops* —
+
+  1. input transform    I (B,C,H,W)    -> D (P, M, C)
+  2. kernel transform   K (C',C,kh,kw) -> G (P, C, C')
+  3. CGEMM              Z[p] = D[p] @ G[p]            (hot stage)
+  4. output inverse     Z (P, M, C')   -> O (B,C',Ho,Wo)
+
+— and a *schedule* is a composition of those ops with data movement in
+between: ``local`` runs them back-to-back on one device, ``nfft`` places an
+``all_to_all`` at each stage boundary (the paper's NUMA-aware tuple
+partitioning), ``wfft`` leaves the contraction axis sharded and pays a
+``psum`` inside stage 3.  This module defines the stage ops once (thin,
+counted wrappers over ``repro.core.fftconv``) plus one pipeline class per
+schedule.
+
+Every pipeline exposes the prepare/execute split:
+
+  ``prepare(plan, k)``   run stage 2 once, returning the transformed kernel
+                         ``G`` in the exact layout execution consumes — for
+                         the sharded schedules that is the *post-boundary*
+                         layout, so prepared execution runs stage 2 AND
+                         boundary all-to-all #2 zero times;
+  ``execute(plan, x, G)``run stages 1/3/4 (+ remaining collectives) against
+                         a prepared ``G``;
+  ``full(plan, x, k)``   the one-shot path: stage 2 inline.
+
+Stage-op invocations are counted at trace time (``stage_counts()``), which
+is what the amortization tests assert against.
+"""
+from __future__ import annotations
+
+import collections
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core.conv_spec import ConvSpec
+from repro.core import fftconv as F
+from repro.core.cgemm import cgemm
+
+
+# --------------------------------------------------------------------------
+# Stage ops (counted)
+# --------------------------------------------------------------------------
+
+_stage_counts: collections.Counter = collections.Counter()
+
+
+def stage_counts() -> dict:
+    """Trace-time invocation counts per stage op (and boundary a2a)."""
+    return dict(_stage_counts)
+
+
+def reset_stage_counts() -> None:
+    _stage_counts.clear()
+
+
+def stage_input_transform(x, spec: ConvSpec):
+    _stage_counts["input_transform"] += 1
+    return F.input_transform(x, spec)
+
+
+def stage_kernel_transform(k, spec: ConvSpec):
+    _stage_counts["kernel_transform"] += 1
+    return F.kernel_transform(k, spec)
+
+
+def stage_cgemm(Dr, Di, Gr, Gi, *, three_m: bool, cgemm_fn=None):
+    _stage_counts["cgemm"] += 1
+    mm = cgemm_fn if cgemm_fn is not None else functools.partial(
+        cgemm, three_m=three_m)
+    return mm(Dr, Di, Gr, Gi)
+
+
+def stage_output_inverse(Zr, Zi, spec: ConvSpec):
+    _stage_counts["output_inverse"] += 1
+    return F.output_inverse(Zr, Zi, spec)
+
+
+def _boundary_a2a(Tr, Ti, axis_name, split, concat):
+    """One nfft stage-boundary all-to-all (re/im pair, counted once)."""
+    _stage_counts["boundary_a2a"] += 1
+    Tr = jax.lax.all_to_all(Tr, axis_name, split, concat, tiled=True)
+    Ti = jax.lax.all_to_all(Ti, axis_name, split, concat, tiled=True)
+    return Tr, Ti
+
+
+# --------------------------------------------------------------------------
+# Shared helpers
+# --------------------------------------------------------------------------
+
+def _pad_axis(x, axis, mult):
+    rem = (-x.shape[axis]) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def _local_spec(spec: ConvSpec, b_loc: int, c_loc: int, co_loc: int):
+    return ConvSpec(B=b_loc, C=c_loc, Cout=co_loc, H=spec.H, W=spec.W,
+                    kh=spec.kh, kw=spec.kw, pad_h=spec.pad_h,
+                    pad_w=spec.pad_w, delta=spec.delta)
+
+
+def padded_sharded_spec(plan) -> ConvSpec:
+    """The ConvSpec of the mesh-padded problem the sharded bodies see.
+
+    Channel/batch axes are zero-padded up to mesh-axis multiples (e.g. VGG
+    conv1.1's C=3); padded channels multiply zeros and are sliced away.
+    """
+    s = plan.spec
+    n_data = plan.mesh.shape[plan.data_axis]
+    n_model = plan.mesh.shape[plan.model_axis]
+    return ConvSpec(
+        B=s.B + (-s.B) % n_data, C=s.C + (-s.C) % n_model,
+        Cout=s.Cout + (-s.Cout) % n_model, H=s.H, W=s.W, kh=s.kh, kw=s.kw,
+        pad_h=s.pad_h, pad_w=s.pad_w, delta=s.delta)
+
+
+def _maybe_cast(pair, dtype):
+    if dtype is None:
+        return pair
+    return pair[0].astype(dtype), pair[1].astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# local schedule
+# --------------------------------------------------------------------------
+
+class LocalPipeline:
+    """Single device: stages back-to-back, no collectives."""
+
+    def __init__(self, cgemm_fn=None):
+        self.cgemm_fn = cgemm_fn
+
+    def prepare(self, plan, k):
+        return stage_kernel_transform(k, plan.spec)
+
+    def execute(self, plan, x, G):
+        spec = plan.spec
+        Dr, Di = stage_input_transform(x, spec)
+        Gr, Gi = G
+        Dr, Di = _maybe_cast((Dr, Di), plan.compute_dtype)
+        Gr, Gi = _maybe_cast((Gr, Gi), plan.compute_dtype)
+        Zr, Zi = stage_cgemm(Dr, Di, Gr, Gi, three_m=plan.three_m,
+                             cgemm_fn=self.cgemm_fn)
+        Zr, Zi = Zr.astype(jnp.float32), Zi.astype(jnp.float32)
+        return stage_output_inverse(Zr, Zi, spec).astype(x.dtype)
+
+    def full(self, plan, x, k):
+        return self.execute(plan, x, self.prepare(plan, k))
+
+
+# --------------------------------------------------------------------------
+# nfft schedule (the paper's NUMA-aware tuple partitioning)
+# --------------------------------------------------------------------------
+
+class NfftPipeline:
+    """Transforms where the data lives; one all-to-all per stage boundary;
+    collective-free hot CGEMM.  Prepared form: ``G`` in the post-boundary
+    layout — global (P, C, C') with the P axis sharded over ``model`` — so
+    prepared execution skips stage 2 and boundary a2a #2 entirely."""
+
+    def __init__(self, cgemm_fn=None):
+        self.cgemm_fn = cgemm_fn
+
+    # ---- bodies (per-device, under shard_map) -----------------------------
+
+    def _body_full(self, x, k, *, plan, spec, n_model):
+        """x: (B_loc, C_loc, H, W); k: C'-sharded (or replicated)."""
+        Dr, Di = self._stage1_and_boundary1(x, plan, spec)
+        Gr, Gi = self._stage2(k, plan, spec, n_model)
+        return self._hot_and_tail(x, Dr, Di, Gr, Gi, plan, spec, n_model)
+
+    def _body_prepared(self, x, Gr, Gi, *, plan, spec, n_model):
+        """x: (B_loc, C_loc, H, W); Gr/Gi: the local (P/N, C, C') slab."""
+        Dr, Di = self._stage1_and_boundary1(x, plan, spec)
+        return self._hot_and_tail(x, Dr, Di, Gr, Gi, plan, spec, n_model)
+
+    def _stage1_and_boundary1(self, x, plan, spec):
+        b_loc, c_loc = x.shape[0], x.shape[1]
+        sp1 = _local_spec(spec, b_loc, c_loc, spec.Cout)
+        Dr, Di = stage_input_transform(x, sp1)
+        if plan.compute_dtype is not None:
+            # cast BEFORE the boundary a2a so the collective moves half the
+            # bytes
+            Dr, Di = _maybe_cast((Dr, Di), plan.compute_dtype)
+        # Boundary a2a #1 (tuple partitioning): (P, M, C_loc) -> (P/N, M, C)
+        return _boundary_a2a(Dr, Di, plan.model_axis, 0, 2)
+
+    def _stage2(self, k, plan, spec, n_model):
+        c_full = k.shape[1]
+        if plan.replicate_kernel_transform:
+            # Stage 2': full kernel transform on every rank, local P-slab
+            # slice — removes boundary a2a #2 (beyond-paper optimization).
+            sp2 = _local_spec(spec, spec.B, c_full, k.shape[0])
+            Gr, Gi = stage_kernel_transform(k, sp2)   # (P, C, C'_full)
+            p_loc = spec.P // n_model
+            idx = jax.lax.axis_index(plan.model_axis) * p_loc
+            Gr = jax.lax.dynamic_slice_in_dim(Gr, idx, p_loc, axis=0)
+            Gi = jax.lax.dynamic_slice_in_dim(Gi, idx, p_loc, axis=0)
+            return Gr, Gi
+        # Stage 2: transform the local C'_loc kernels -> G (P, C, C'_loc)
+        sp2 = _local_spec(spec, spec.B, c_full, k.shape[0])
+        Gr, Gi = stage_kernel_transform(k, sp2)
+        # Boundary a2a #2: (P, C, C'_loc) -> (P/N, C, C')
+        return _boundary_a2a(Gr, Gi, plan.model_axis, 0, 2)
+
+    def _hot_and_tail(self, x, Dr, Di, Gr, Gi, plan, spec, n_model):
+        b_loc, c_full = x.shape[0], spec.C
+        # Stage 3 (HOT): local P/N-slab complex GEMM — no collectives.
+        Gr, Gi = _maybe_cast((Gr, Gi), plan.compute_dtype)
+        Zr, Zi = stage_cgemm(Dr, Di, Gr, Gi, three_m=plan.three_m,
+                             cgemm_fn=self.cgemm_fn)  # f32 accumulation
+        if plan.compute_dtype is not None:
+            Zr, Zi = _maybe_cast((Zr, Zi), plan.compute_dtype)
+        # Boundary a2a #3 (gather tuples for the inverse):
+        # (P/N, M_loc, C') -> (P, M_loc, C'/N)
+        Zr, Zi = _boundary_a2a(Zr, Zi, plan.model_axis, 2, 0)
+        Zr, Zi = Zr.astype(jnp.float32), Zi.astype(jnp.float32)
+        # Stage 4: each model rank inverts its C'/N output-channel slab.
+        sp4 = _local_spec(spec, b_loc, c_full, spec.Cout // n_model)
+        return stage_output_inverse(Zr, Zi, sp4)
+
+    # ---- global entry points ----------------------------------------------
+
+    def prepare(self, plan, k):
+        """Stage 2 (+ its boundary movement), once: global (P, C, C')."""
+        spec = padded_sharded_spec(plan)
+        n_model = plan.mesh.shape[plan.model_axis]
+        kp = _pad_axis(_pad_axis(k, 0, n_model), 1, n_model)
+        return stage_kernel_transform(kp, spec)
+
+    def execute(self, plan, x, G):
+        spec = padded_sharded_spec(plan)
+        mesh = plan.mesh
+        n_model = mesh.shape[plan.model_axis]
+        xp = _pad_axis(_pad_axis(x, 0, mesh.shape[plan.data_axis]), 1,
+                       n_model)
+        Gr, Gi = G
+        body = functools.partial(self._body_prepared, plan=plan, spec=spec,
+                                 n_model=n_model)
+        in_specs = (P(plan.data_axis, plan.model_axis, None, None),
+                    P(plan.model_axis, None, None),    # G: P-slab per rank
+                    P(plan.model_axis, None, None))
+        out_spec = P(plan.data_axis, plan.model_axis, None, None)
+        y = shard_map(body, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_spec)(xp, Gr, Gi)
+        return y[:plan.spec.B, :plan.spec.Cout].astype(x.dtype)
+
+    def full(self, plan, x, k):
+        spec = padded_sharded_spec(plan)
+        mesh = plan.mesh
+        n_model = mesh.shape[plan.model_axis]
+        xp = _pad_axis(_pad_axis(x, 0, mesh.shape[plan.data_axis]), 1,
+                       n_model)
+        kp = _pad_axis(_pad_axis(k, 0, n_model), 1, n_model)
+        body = functools.partial(self._body_full, plan=plan, spec=spec,
+                                 n_model=n_model)
+        k_spec = P(None, None, None, None) \
+            if plan.replicate_kernel_transform \
+            else P(plan.model_axis, None, None, None)   # k: C' sharded
+        in_specs = (P(plan.data_axis, plan.model_axis, None, None), k_spec)
+        out_spec = P(plan.data_axis, plan.model_axis, None, None)
+        y = shard_map(body, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_spec)(xp, kp)
+        return y[:plan.spec.B, :plan.spec.Cout].astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# wfft schedule (Wang et al. baseline)
+# --------------------------------------------------------------------------
+
+class WfftPipeline:
+    """No tuple partitioning: the CGEMM contracts a channel axis spread over
+    ``model``, so a psum (all-reduce of the whole Z) sits inside the hot
+    stage.  Prepared form: global (P, C, C') with the C axis sharded."""
+
+    def __init__(self, cgemm_fn=None):
+        self.cgemm_fn = cgemm_fn
+
+    def _body(self, x, Gr, Gi, *, plan, spec, n_model):
+        """x: (B_loc, C_loc, H, W); Gr/Gi: the local (P, C_loc, C') slab."""
+        b_loc, c_loc = x.shape[0], x.shape[1]
+        co_full = spec.Cout
+        sp1 = _local_spec(spec, b_loc, c_loc, co_full)
+        Dr, Di = stage_input_transform(x, sp1)        # (P, M_loc, C_loc)
+        Dr, Di = _maybe_cast((Dr, Di), plan.compute_dtype)
+        Gr, Gi = _maybe_cast((Gr, Gi), plan.compute_dtype)
+        Zr, Zi = stage_cgemm(Dr, Di, Gr, Gi, three_m=plan.three_m,
+                             cgemm_fn=self.cgemm_fn)  # partial sums, f32 acc
+        if plan.compute_dtype is not None:
+            # cast BEFORE the hot-stage psum so the all-reduce moves half
+            # the bytes (parity with the nfft boundary-a2a cast)
+            Zr, Zi = _maybe_cast((Zr, Zi), plan.compute_dtype)
+        # HOT-STAGE collective: all-reduce the full Z across the model axis.
+        Zr = jax.lax.psum(Zr, plan.model_axis)
+        Zi = jax.lax.psum(Zi, plan.model_axis)
+        Zr, Zi = Zr.astype(jnp.float32), Zi.astype(jnp.float32)
+
+        # Each rank inverts its C'/N slice (avoids duplicate stage-4 work).
+        co_loc = co_full // n_model
+        idx = jax.lax.axis_index(plan.model_axis)
+        Zr = jax.lax.dynamic_slice_in_dim(Zr, idx * co_loc, co_loc, axis=2)
+        Zi = jax.lax.dynamic_slice_in_dim(Zi, idx * co_loc, co_loc, axis=2)
+        sp4 = _local_spec(spec, b_loc, c_loc, co_loc)
+        return stage_output_inverse(Zr, Zi, sp4)
+
+    def _body_full(self, x, k, *, plan, spec, n_model):
+        """k: (C'_full, C_loc, kh, kw) — stage 2 inline on the local slab."""
+        sp2 = _local_spec(spec, x.shape[0], k.shape[1], k.shape[0])
+        Gr, Gi = stage_kernel_transform(k, sp2)       # (P, C_loc, C'_full)
+        return self._body(x, Gr, Gi, plan=plan, spec=spec, n_model=n_model)
+
+    def prepare(self, plan, k):
+        spec = padded_sharded_spec(plan)
+        n_model = plan.mesh.shape[plan.model_axis]
+        kp = _pad_axis(_pad_axis(k, 0, n_model), 1, n_model)
+        return stage_kernel_transform(kp, spec)
+
+    def _run(self, plan, x, args, body, extra_in_specs):
+        mesh = plan.mesh
+        xp = _pad_axis(_pad_axis(x, 0, mesh.shape[plan.data_axis]), 1,
+                       mesh.shape[plan.model_axis])
+        in_specs = (P(plan.data_axis, plan.model_axis, None, None),
+                    *extra_in_specs)
+        out_spec = P(plan.data_axis, plan.model_axis, None, None)
+        y = shard_map(body, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_spec)(xp, *args)
+        return y[:plan.spec.B, :plan.spec.Cout].astype(x.dtype)
+
+    def execute(self, plan, x, G):
+        spec = padded_sharded_spec(plan)
+        n_model = plan.mesh.shape[plan.model_axis]
+        body = functools.partial(self._body, plan=plan, spec=spec,
+                                 n_model=n_model)
+        g_spec = P(None, plan.model_axis, None)        # G: C sharded
+        return self._run(plan, x, G, body, (g_spec, g_spec))
+
+    def full(self, plan, x, k):
+        spec = padded_sharded_spec(plan)
+        n_model = plan.mesh.shape[plan.model_axis]
+        kp = _pad_axis(_pad_axis(k, 0, n_model), 1, n_model)
+        body = functools.partial(self._body_full, plan=plan, spec=spec,
+                                 n_model=n_model)
+        k_spec = P(None, plan.model_axis, None, None)  # k: C sharded
+        return self._run(plan, x, (kp,), body, (k_spec,))
+
+
+PIPELINES = {"local": LocalPipeline, "nfft": NfftPipeline,
+             "wfft": WfftPipeline}
+
+
+def pipeline_for(schedule: str, cgemm_fn=None):
+    return PIPELINES[schedule](cgemm_fn)

@@ -1,8 +1,9 @@
-"""FFT-based convolution (the paper's algorithm), single-device core.
+"""FFT-based convolution (the paper's algorithm): the stage primitives.
 
-Four stages, kept as separate functions so the distributed schedules in
-``repro.parallel`` can place collectives *between* stages (nFFT) or inside
-stage 3 (the wFFT baseline):
+Four stages, kept as separate functions so the stage graph in
+``repro.conv.stages`` can place collectives *between* stages (nFFT) or
+inside stage 3 (the wFFT baseline), and so the kernel transform can run
+once per weight version (``ConvPlan.prepare``):
 
   1. ``input_transform``   I (B,C,H,W)      -> D (P, M, C)   [rfft2 of 16x16 tiles]
   2. ``kernel_transform``  K (C',C,kh,kw)   -> G (P, C, C')  [conjugate rfft2]
@@ -16,7 +17,6 @@ Convolution here is ML cross-correlation; ``conv2d_direct`` is the oracle.
 """
 from __future__ import annotations
 
-import functools
 import warnings
 
 import jax
@@ -24,25 +24,33 @@ import jax.numpy as jnp
 
 from repro.core.conv_spec import ConvSpec
 from repro.core.dft import rfft2_tiles, irfft2_tiles
-from repro.core.cgemm import cgemm
 
 
 # --------------------------------------------------------------------------
 # Oracle
 # --------------------------------------------------------------------------
 
-def conv2d_direct(x, k, *, padding=0):
+def conv2d_direct(x, k, *, padding=0, compute_dtype=None):
     """Direct convolution oracle: lax.conv_general_dilated, NCHW/OIHW.
 
     ``padding`` is an int or ``(pad_h, pad_w)``, symmetric per axis —
     the same convention as the FFT path (lax wants (lo, hi) per dim).
+    ``compute_dtype`` casts the operands (f32 accumulation, result back in
+    ``x.dtype``) — the direct-backend analogue of the FFT schedules' hot
+    CGEMM operand cast.
     """
     pad = (padding, padding) if isinstance(padding, int) else padding
-    return jax.lax.conv_general_dilated(
+    out_dtype = x.dtype
+    acc = {}
+    if compute_dtype is not None:
+        x, k = x.astype(compute_dtype), k.astype(compute_dtype)
+        acc = dict(preferred_element_type=jnp.float32)
+    y = jax.lax.conv_general_dilated(
         x, k, window_strides=(1, 1),
         padding=[(pad[0], pad[0]), (pad[1], pad[1])],
-        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"), **acc,
     )
+    return y.astype(out_dtype) if compute_dtype is not None else y
 
 
 # --------------------------------------------------------------------------
@@ -116,51 +124,6 @@ def make_spec(x_shape, k_shape, padding=0, delta=16) -> ConvSpec:
     pad = (padding, padding) if isinstance(padding, int) else padding
     return ConvSpec(B=B, C=C, Cout=Cout, H=H, W=W, kh=kh, kw=kw,
                     pad_h=pad[0], pad_w=pad[1], delta=delta)
-
-
-def _fft_conv2d_impl(x, k, spec: ConvSpec, three_m: bool, cgemm_fn=None):
-    Dr, Di = input_transform(x, spec)
-    Gr, Gi = kernel_transform(k, spec)
-    mm = cgemm_fn if cgemm_fn is not None else functools.partial(
-        cgemm, three_m=three_m)
-    Zr, Zi = mm(Dr, Di, Gr, Gi)
-    return output_inverse(Zr, Zi, spec).astype(x.dtype)
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
-def _fft_conv2d(x, k, padding, delta, three_m):
-    spec = make_spec(x.shape, k.shape, padding, delta)
-    return _fft_conv2d_impl(x, k, spec, three_m)
-
-
-def _fft_conv2d_fwd(x, k, padding, delta, three_m):
-    return _fft_conv2d(x, k, padding, delta, three_m), (x, k)
-
-
-def _fft_conv2d_bwd(padding, delta, three_m, res, dy):
-    x, k = res
-    Cout, C, kh, kw = k.shape
-    pad = (padding, padding) if isinstance(padding, int) else padding
-    # dx: FFT-conv of dy against the spatially-flipped, channel-swapped kernel,
-    # "full" correlation cropped by the forward padding.
-    kt = jnp.flip(k, axis=(-2, -1)).transpose(1, 0, 2, 3)   # (C, C', kh, kw)
-    dx_full = _fft_conv2d(dy, kt, (kh - 1, kw - 1), delta, three_m)
-    H, W = x.shape[-2], x.shape[-1]
-    dx = jax.lax.dynamic_slice(
-        dx_full, (0, 0, pad[0], pad[1]), (x.shape[0], C, H, W))
-    # dk: correlation of x with dy, batch as the contraction axis. The "kernel"
-    # (dy) spatial extent exceeds the tile, so use the direct path (one call).
-    xp = jnp.pad(x, ((0, 0), (0, 0), (pad[0], pad[0]), (pad[1], pad[1])))
-    dk = jax.lax.conv_general_dilated(
-        xp.transpose(1, 0, 2, 3),                  # (C, B, Hp, Wp)
-        dy.transpose(1, 0, 2, 3),                  # (C', B, Ho, Wo)
-        window_strides=(1, 1), padding="VALID",
-        dimension_numbers=("NCHW", "OIHW", "NCHW"),
-    ).transpose(1, 0, 2, 3)                        # (C', C, kh, kw)
-    return dx.astype(x.dtype), dk.astype(k.dtype)
-
-
-_fft_conv2d.defvjp(_fft_conv2d_fwd, _fft_conv2d_bwd)
 
 
 def fft_conv2d(x, k, *, padding=0, delta=16, three_m: bool = True):

@@ -36,6 +36,32 @@ def split_keys(key, n):
 
 
 # --------------------------------------------------------------------------
+# convolution (through the plan/execute engine)
+# --------------------------------------------------------------------------
+
+def conv2d_planned(x, k, *, padding=1, backend="auto", schedule="auto",
+                   mesh=None, compute_dtype=None, weights_version=None):
+    """NCHW convolution through ``repro.conv`` for model layers.
+
+    Training (``weights_version=None``): executes ``plan(x, k)`` — fully
+    differentiable in ``x`` and ``k`` via the plan-level VJP, on every
+    backend x schedule.
+
+    Serving (``weights_version`` given, e.g. the train step the weights
+    were loaded from): executes a *prepared* plan — the kernel transform is
+    cached under (plan, version) and skipped on every call; passing a new
+    version after a weight update invalidates and re-prepares.
+    """
+    from repro.conv import plan_conv
+    plan = plan_conv(tuple(x.shape), tuple(k.shape), padding=padding,
+                     backend=backend, schedule=schedule, mesh=mesh,
+                     compute_dtype=compute_dtype)
+    if weights_version is None:
+        return plan(x, k)
+    return plan.prepare(k, weights_version=weights_version)(x)
+
+
+# --------------------------------------------------------------------------
 # norms
 # --------------------------------------------------------------------------
 

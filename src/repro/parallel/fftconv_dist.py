@@ -1,7 +1,11 @@
-"""Distributed FFT-based convolution: the paper's nFFT vs. the wFFT baseline.
+"""Distributed FFT-based convolution: deprecated entry point.
 
-The NUMA mapping (DESIGN.md §2): NUMA node -> mesh device on the ``model``
-axis, remote memory access -> ICI collective bytes.
+The nFFT / wFFT schedules now live in the stage graph
+(``repro.conv.stages``: ``NfftPipeline`` / ``WfftPipeline``) and are
+composed by the plan engine — plan with ``repro.conv.plan_conv(...,
+mesh=mesh, schedule="nfft"|"wfft")``.  The NUMA mapping is unchanged
+(DESIGN.md §2): NUMA node -> mesh device on the ``model`` axis, remote
+memory access -> ICI collective bytes.
 
 nFFT (the paper's algorithm)
   * transforms are computed where the inputs already live
@@ -9,195 +13,17 @@ nFFT (the paper's algorithm)
   * one ``all_to_all`` per tensor at each stage *boundary* re-partitions the
     frequency axis P onto the ``model`` axis — the TPU analogue of the
     paper's "NUMA-aware tuple partitioning" (Fig. 4),
-  * the hot CGEMM then runs with **zero collectives**: every chip multiplies
-    its own P/N frequency slab (node-level), XLA tiles M x C' per chip
-    (core-level), the MXU contracts (vector-level).
+  * the hot CGEMM then runs with **zero collectives**.
 
 wFFT (baseline, Wang et al. 2020)
   * no tuple partitioning: the CGEMM contracts a channel axis that is spread
-    over ``model``, so a ``psum`` (all-reduce of the whole Z) sits *inside*
-    the hot stage — the analogue of the baseline's remote reads during the
-    CGEMM.
+    over ``model``, so a ``psum`` sits *inside* the hot stage.
 
-Channel/batch axes are zero-padded up to mesh-axis multiples (e.g. VGG
-conv1.1's C=3); padded channels multiply zeros and are sliced away.
+This module keeps only the deprecated ``fft_conv2d_sharded`` shim.
 """
 from __future__ import annotations
 
-import functools
 import warnings
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-
-from repro.compat import shard_map
-from repro.core.conv_spec import ConvSpec
-from repro.core import fftconv as F
-from repro.core.cgemm import cgemm
-
-
-def _pad_axis(x, axis, mult):
-    rem = (-x.shape[axis]) % mult
-    if rem == 0:
-        return x
-    pads = [(0, 0)] * x.ndim
-    pads[axis] = (0, rem)
-    return jnp.pad(x, pads)
-
-
-def _local_spec(spec: ConvSpec, b_loc: int, c_loc: int, co_loc: int):
-    return ConvSpec(B=b_loc, C=c_loc, Cout=co_loc, H=spec.H, W=spec.W,
-                    kh=spec.kh, kw=spec.kw, pad_h=spec.pad_h,
-                    pad_w=spec.pad_w, delta=spec.delta)
-
-
-def _nfft_local(x, k, spec: ConvSpec, n_model: int, model_axis: str,
-                three_m: bool, cgemm_fn, replicate_kernel_transform=False,
-                compute_dtype=None):
-    """Per-device body of the nFFT schedule. x: (B_loc, C_loc, H, W),
-    k: (C'_loc, C, kh, kw) -> O_loc: (B_loc, C'_loc, Ho, Wo).
-
-    replicate_kernel_transform: compute the (cheap) kernel transform
-    redundantly on every model rank and slice the local P-slab — removes
-    boundary a2a #2 entirely (beyond-paper optimization, §Perf).
-    compute_dtype: cast CGEMM operands (e.g. bf16; f32 accumulation).
-    """
-    b_loc, c_loc = x.shape[0], x.shape[1]
-    co_loc, c_full = k.shape[0], k.shape[1]
-    co_full = co_loc * n_model if not replicate_kernel_transform \
-        else k.shape[0]
-
-    # Stage 1: transform the local (B_loc, C_loc) slab -> D (P, M_loc, C_loc)
-    sp1 = _local_spec(spec, b_loc, c_loc, co_loc)
-    Dr, Di = F.input_transform(x, sp1)
-    if compute_dtype is not None:
-        # cast BEFORE the boundary a2a so the collective moves half the bytes
-        Dr, Di = Dr.astype(compute_dtype), Di.astype(compute_dtype)
-    # Boundary a2a #1 (tuple partitioning): (P, M, C_loc) -> (P/N, M, C)
-    Dr = jax.lax.all_to_all(Dr, model_axis, 0, 2, tiled=True)
-    Di = jax.lax.all_to_all(Di, model_axis, 0, 2, tiled=True)
-
-    if replicate_kernel_transform:
-        # Stage 2': full kernel transform on every rank, local P-slab slice.
-        sp2 = _local_spec(spec, b_loc, c_full, co_full)
-        Gr, Gi = F.kernel_transform(k, sp2)       # (P, C, C'_full)
-        p_loc = spec.P // n_model
-        idx = jax.lax.axis_index(model_axis) * p_loc
-        Gr = jax.lax.dynamic_slice_in_dim(Gr, idx, p_loc, axis=0)
-        Gi = jax.lax.dynamic_slice_in_dim(Gi, idx, p_loc, axis=0)
-    else:
-        # Stage 2: transform the local C'_loc kernels -> G (P, C, C'_loc)
-        sp2 = _local_spec(spec, b_loc, c_full, co_loc)
-        Gr, Gi = F.kernel_transform(k, sp2)
-        # Boundary a2a #2: (P, C, C'_loc) -> (P/N, C, C')
-        Gr = jax.lax.all_to_all(Gr, model_axis, 0, 2, tiled=True)
-        Gi = jax.lax.all_to_all(Gi, model_axis, 0, 2, tiled=True)
-
-    # Stage 3 (HOT): local P/N-slab complex GEMM — no collectives.
-    if compute_dtype is not None:
-        Gr, Gi = Gr.astype(compute_dtype), Gi.astype(compute_dtype)
-    mm = cgemm_fn if cgemm_fn is not None else functools.partial(
-        cgemm, three_m=three_m)
-    Zr, Zi = mm(Dr, Di, Gr, Gi)                   # (P/N, M_loc, C') f32 acc
-    if compute_dtype is not None:
-        Zr, Zi = Zr.astype(compute_dtype), Zi.astype(compute_dtype)
-
-    # Boundary a2a #3 (gather tuples for the inverse): -> (P, M_loc, C'/N)
-    Zr = jax.lax.all_to_all(Zr, model_axis, 2, 0, tiled=True)
-    Zi = jax.lax.all_to_all(Zi, model_axis, 2, 0, tiled=True)
-    Zr, Zi = Zr.astype(jnp.float32), Zi.astype(jnp.float32)
-
-    # Stage 4: local inverse transform of the C'_loc output slab. After
-    # boundary a2a #3 each model rank holds a C'_full/N output-channel
-    # slice in BOTH paths: the non-replicated path re-gathers the C'_loc
-    # slabs it contracted, and the replicated path splits its full-C' Z
-    # across ranks — so the local Cout is co_full // n_model either way.
-    sp4 = _local_spec(spec, b_loc, c_full, co_full // n_model)
-    return F.output_inverse(Zr, Zi, sp4)
-
-
-def _wfft_local(x, k, spec: ConvSpec, n_model: int, model_axis: str,
-                three_m: bool, cgemm_fn):
-    """Per-device body of the wFFT baseline. x: (B_loc, C_loc, H, W),
-    k: (C'_full, C_loc, kh, kw). The CGEMM contraction axis C is sharded, so
-    a psum (all-reduce) lands inside the hot stage."""
-    b_loc, c_loc = x.shape[0], x.shape[1]
-    co_full = k.shape[0]
-
-    sp1 = _local_spec(spec, b_loc, c_loc, co_full)
-    Dr, Di = F.input_transform(x, sp1)            # (P, M_loc, C_loc)
-    Gr, Gi = F.kernel_transform(k, sp1)           # (P, C_loc, C'_full)
-
-    mm = cgemm_fn if cgemm_fn is not None else functools.partial(
-        cgemm, three_m=three_m)
-    Zr, Zi = mm(Dr, Di, Gr, Gi)                   # partial sums over C_loc
-    # HOT-STAGE collective: all-reduce the full Z across the model axis.
-    Zr = jax.lax.psum(Zr, model_axis)
-    Zi = jax.lax.psum(Zi, model_axis)
-
-    # Each model rank inverts its C'/N slice (avoids duplicate stage-4 work).
-    co_loc = co_full // n_model
-    idx = jax.lax.axis_index(model_axis)
-    Zr = jax.lax.dynamic_slice_in_dim(Zr, idx * co_loc, co_loc, axis=2)
-    Zi = jax.lax.dynamic_slice_in_dim(Zi, idx * co_loc, co_loc, axis=2)
-    sp4 = _local_spec(spec, b_loc, c_loc, co_loc)
-    return F.output_inverse(Zr, Zi, sp4)
-
-
-def _fft_conv2d_sharded_impl(x, k, mesh, *, strategy: str = "nfft",
-                             padding=0, delta: int = 16,
-                             three_m: bool = True,
-                             data_axis: str = "data",
-                             model_axis: str = "model",
-                             cgemm_fn=None,
-                             replicate_kernel_transform=False,
-                             compute_dtype=None):
-    """Distributed FFT convolution (execution body of the sharded plans).
-
-    Args:
-      x: (B, C, H, W) global input; sharded (data, model, -, -).
-      k: (C', C, kh, kw) global kernels.
-      mesh: jax Mesh containing ``data_axis`` and ``model_axis``.
-      strategy: 'nfft' (paper) or 'wfft' (baseline).
-    Returns:
-      (B, C', Ho, Wo), sharded (data, model, -, -).
-    """
-    if strategy not in ("nfft", "wfft"):
-        raise ValueError(f"unknown strategy {strategy!r}")
-    n_data = mesh.shape[data_axis]
-    n_model = mesh.shape[model_axis]
-    B, C, _, _ = x.shape
-    Cout = k.shape[0]
-
-    # Pad B/C/C' to mesh multiples; P must divide the model axis.
-    xp = _pad_axis(_pad_axis(x, 0, n_data), 1, n_model)
-    kp = _pad_axis(_pad_axis(k, 0, n_model), 1, n_model)
-    spec = F.make_spec(xp.shape, kp.shape, padding, delta)
-    if spec.P % n_model:
-        raise ValueError(f"P={spec.P} not divisible by model axis {n_model}")
-
-    if strategy == "nfft":
-        body = functools.partial(
-            _nfft_local, spec=spec, n_model=n_model, model_axis=model_axis,
-            three_m=three_m, cgemm_fn=cgemm_fn,
-            replicate_kernel_transform=replicate_kernel_transform,
-            compute_dtype=compute_dtype)
-        in_specs = (P(data_axis, model_axis, None, None),   # x: B, C sharded
-                    P(None, None, None, None)               # k replicated
-                    if replicate_kernel_transform else
-                    P(model_axis, None, None, None))        # k: C' sharded
-    else:
-        body = functools.partial(_wfft_local, spec=spec, n_model=n_model,
-                                 model_axis=model_axis, three_m=three_m,
-                                 cgemm_fn=cgemm_fn)
-        in_specs = (P(data_axis, model_axis, None, None),   # x: B, C sharded
-                    P(None, model_axis, None, None))        # k: C sharded
-    out_spec = P(data_axis, model_axis, None, None)
-
-    y = shard_map(body, mesh=mesh, in_specs=in_specs,
-                  out_specs=out_spec)(xp, kp)
-    return y[:B, :Cout]
 
 
 def fft_conv2d_sharded(x, k, mesh, *, strategy: str = "nfft",
@@ -213,18 +39,19 @@ def fft_conv2d_sharded(x, k, mesh, *, strategy: str = "nfft",
         "fft_conv2d_sharded is deprecated; use repro.conv.plan_conv("
         "x.shape, k.shape, mesh=mesh, schedule='nfft'|'wfft') and call "
         "the plan", DeprecationWarning, stacklevel=2)
-    if cgemm_fn is not None:
-        # custom CGEMM closures can't be plan-cached; run the body directly
-        return _fft_conv2d_sharded_impl(
-            x, k, mesh, strategy=strategy, padding=padding, delta=delta,
-            three_m=three_m, data_axis=data_axis, model_axis=model_axis,
-            cgemm_fn=cgemm_fn,
-            replicate_kernel_transform=replicate_kernel_transform,
-            compute_dtype=compute_dtype)
+    if strategy not in ("nfft", "wfft"):
+        raise ValueError(f"unknown strategy {strategy!r}")
     from repro.conv import plan_conv
     plan = plan_conv(tuple(x.shape), tuple(k.shape), padding=padding,
                      delta=delta, backend="fft-xla", schedule=strategy,
                      mesh=mesh, three_m=three_m, data_axis=data_axis,
                      model_axis=model_axis, compute_dtype=compute_dtype,
-                     replicate_kernel_transform=replicate_kernel_transform)
+                     replicate_kernel_transform=replicate_kernel_transform,
+                     cache=cgemm_fn is None)
+    if cgemm_fn is not None:
+        # custom CGEMM closures can't be plan-cached; run the stage pipeline
+        # directly with the closure injected.
+        from repro.conv import stages
+        return stages.pipeline_for(strategy, cgemm_fn=cgemm_fn).full(
+            plan, x, k)
     return plan(x, k)

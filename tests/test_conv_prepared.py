@@ -1,0 +1,185 @@
+"""Prepare/execute split: cached kernel transforms, stage-2 amortization
+(counter + jaxpr), and weights-version invalidation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compat import make_mesh
+from repro.conv import (
+    plan_conv, clear_prepared_cache, prepared_cache_info,
+    stage_counts, reset_stage_counts,
+)
+from repro.core import conv2d_direct
+
+
+def _rand(shape, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(shape),
+                       jnp.float32)
+
+
+BACKENDS = ["direct", "fft-xla", "fft-pallas"]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_prepared_matches_one_shot_local(backend):
+    x, k = _rand((2, 3, 18, 18), 1), _rand((4, 3, 3, 3), 2)
+    plan = plan_conv(x.shape, k.shape, padding=1, backend=backend)
+    prepared = plan.prepare(k)
+    assert prepared.out_shape == plan.out_shape
+    np.testing.assert_allclose(np.asarray(prepared(x)),
+                               np.asarray(plan(x, k)), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(prepared(x)),
+                               np.asarray(conv2d_direct(x, k, padding=1)),
+                               rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("schedule", ["nfft", "wfft"])
+def test_prepared_matches_one_shot_sharded(schedule):
+    mesh = make_mesh((1, 1), ("data", "model"))
+    x, k = _rand((2, 3, 18, 18), 3), _rand((4, 3, 3, 3), 4)
+    plan = plan_conv(x.shape, k.shape, padding=1, schedule=schedule,
+                     mesh=mesh)
+    prepared = plan.prepare(k)
+    np.testing.assert_allclose(
+        np.asarray(prepared(x)),
+        np.asarray(conv2d_direct(x, k, padding=1)), rtol=3e-4, atol=3e-4)
+    # prepared execution works under jit too
+    np.testing.assert_allclose(np.asarray(jax.jit(prepared)(x)),
+                               np.asarray(prepared(x)), rtol=1e-6, atol=1e-6)
+
+
+def test_prepared_nfft_skips_stage2_and_boundary_a2a2():
+    """The acceptance check: a prepared nfft execution must trace ZERO
+    kernel-transform stages and one fewer all_to_all boundary (re/im pair)
+    than the one-shot plan — stage 2 and boundary a2a #2 are amortized."""
+    mesh = make_mesh((1, 1), ("data", "model"))
+    x, k = _rand((2, 4, 20, 20), 5), _rand((4, 4, 3, 3), 6)
+    plan = plan_conv(x.shape, k.shape, padding=1, schedule="nfft", mesh=mesh)
+    prepared = plan.prepare(k)
+
+    reset_stage_counts()
+    jaxpr_prepared = str(jax.make_jaxpr(prepared)(x))
+    prep_counts = stage_counts()
+
+    reset_stage_counts()
+    jaxpr_full = str(jax.make_jaxpr(lambda a, b: plan(a, b))(x, k))
+    full_counts = stage_counts()
+    reset_stage_counts()
+
+    assert prep_counts.get("kernel_transform", 0) == 0
+    assert full_counts["kernel_transform"] == 1
+    assert prep_counts["boundary_a2a"] == 2        # a2a #1 and #3 only
+    assert full_counts["boundary_a2a"] == 3
+    # and the traced program agrees: 4 all_to_all eqns (2 boundaries x
+    # re/im) vs 6 for the one-shot path
+    assert jaxpr_prepared.count("all_to_all") == 4
+    assert jaxpr_full.count("all_to_all") == 6
+
+
+def test_prepare_runs_stage2_eagerly_not_per_execute():
+    x, k = _rand((1, 2, 12, 12), 7), _rand((2, 2, 3, 3), 8)
+    plan = plan_conv(x.shape, k.shape, padding=1, backend="fft-xla")
+    reset_stage_counts()
+    prepared = plan.prepare(k)
+    assert stage_counts()["kernel_transform"] == 1
+    reset_stage_counts()
+    prepared(x)
+    prepared(x)
+    assert stage_counts().get("kernel_transform", 0) == 0
+    reset_stage_counts()
+
+
+def test_weights_version_invalidation():
+    """Same (kernel, version) -> cache hit; bumped version -> the cached
+    transform is invalidated and recomputed; numerics always track the
+    weights actually passed."""
+    clear_prepared_cache()
+    x = _rand((2, 3, 16, 16), 9)
+    k1, k2 = _rand((4, 3, 3, 3), 10), _rand((4, 3, 3, 3), 11)
+    plan = plan_conv(x.shape, k1.shape, padding=1, backend="fft-xla")
+
+    p1 = plan.prepare(k1, weights_version=1)
+    assert prepared_cache_info().misses == 1
+    np.testing.assert_allclose(np.asarray(p1(x)),
+                               np.asarray(conv2d_direct(x, k1, padding=1)),
+                               rtol=3e-4, atol=3e-4)
+    # same kernel + same version: memoized object, no recompute
+    assert plan.prepare(k1, weights_version=1) is p1
+    assert prepared_cache_info().hits == 1
+
+    # weight update -> same kernel slot, new version: invalidation fires
+    # and the numerics follow the new weights
+    p2 = plan.prepare(k2, weights_version=2)
+    assert p2 is not p1
+    np.testing.assert_allclose(np.asarray(p2(x)),
+                               np.asarray(conv2d_direct(x, k2, padding=1)),
+                               rtol=3e-4, atol=3e-4)
+    p1b = plan.prepare(k1, weights_version=2)
+    assert p1b is not p1
+    assert prepared_cache_info().invalidations == 1   # k1's entry replaced
+    # version=None is never cached
+    size = prepared_cache_info().size
+    assert plan.prepare(k1) is not p1b
+    assert prepared_cache_info().size == size
+    clear_prepared_cache()
+
+
+def test_same_geometry_layers_do_not_collide():
+    """Regression: two layers with identical geometry share one ConvPlan;
+    preparing both under the same weights_version must NOT hand layer B
+    layer A's cached transform (the cache is keyed per kernel)."""
+    clear_prepared_cache()
+    x = _rand((1, 3, 16, 16), 17)
+    kA, kB = _rand((4, 3, 3, 3), 18), _rand((4, 3, 3, 3), 19)
+    planA = plan_conv(x.shape, kA.shape, padding=1, backend="fft-xla")
+    planB = plan_conv(x.shape, kB.shape, padding=1, backend="fft-xla")
+    assert planA is planB                   # shared plan (the trap)
+    yA = planA.prepare(kA, weights_version=7)(x)
+    yB = planB.prepare(kB, weights_version=7)(x)
+    np.testing.assert_allclose(np.asarray(yA),
+                               np.asarray(conv2d_direct(x, kA, padding=1)),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(yB),
+                               np.asarray(conv2d_direct(x, kB, padding=1)),
+                               rtol=3e-4, atol=3e-4)
+    assert prepared_cache_info().size == 2
+    clear_prepared_cache()
+
+
+def test_prepared_rejects_mismatched_shapes():
+    plan = plan_conv((2, 3, 16, 16), (4, 3, 3, 3), padding=1,
+                     backend="fft-xla")
+    x, k = _rand((2, 3, 16, 16), 12), _rand((4, 3, 3, 3), 13)
+    with pytest.raises(ValueError, match="plan was built for kernel"):
+        plan.prepare(k[:2])
+    prepared = plan.prepare(k)
+    with pytest.raises(ValueError, match="plan was built for input"):
+        prepared(x[:1])
+
+
+@pytest.mark.parametrize("backend", ["fft-xla", "fft-pallas"])
+def test_prepared_differentiable_wrt_input(backend):
+    """Prepared execution carries the plan-level VJP for x (the kernel is
+    frozen by design) — including fft-pallas, whose kernel jax cannot
+    differentiate through natively."""
+    x, k = _rand((1, 2, 12, 12), 14), _rand((3, 2, 3, 3), 15)
+    plan = plan_conv(x.shape, k.shape, padding=1, backend=backend)
+    prepared = plan.prepare(k)
+    g1 = jax.grad(lambda a: jnp.sum(jnp.sin(prepared(a))))(x)
+    g0 = jax.grad(lambda a: jnp.sum(jnp.sin(
+        conv2d_direct(a, k, padding=1))))(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g0),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_prepared_cache_is_lru_bounded(monkeypatch):
+    monkeypatch.setenv("REPRO_CONV_PLAN_CACHE_SIZE", "2")
+    clear_prepared_cache()
+    k = _rand((2, 2, 3, 3), 16)
+    plans = [plan_conv((1, 2, 8 + i, 8), (2, 2, 3, 3), padding=1,
+                       backend="fft-xla") for i in range(3)]
+    for plan in plans:
+        plan.prepare(k, weights_version=0)
+    assert prepared_cache_info().size == 2      # oldest evicted
+    clear_prepared_cache()
