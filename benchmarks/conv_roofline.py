@@ -2,10 +2,15 @@
 production 16x16 mesh — baseline wFFT, paper-faithful nFFT, then
 beyond-paper variants:
 
-  repG  : replicate the (cheap) kernel transform instead of a2a-ing G
-  bf16  : bf16 CGEMM operands with f32 accumulation (halves hot bytes,
-          doubles MXU rate)
-  4m    : 4-matmul complex product (vs default 3M) for comparison
+  repG      : replicate the (cheap) kernel transform instead of a2a-ing G
+  bf16      : bf16 CGEMM operands with f32 accumulation (halves hot bytes,
+              doubles MXU rate)
+  4m        : 4-matmul complex product (vs default 3M) for comparison
+  ep_fused  : bias+relu epilogue FUSED into stage 4 inside shard_map (the
+              elementwise tail runs on each rank's 1/N output slab)
+  ep_unfused: the same bias+relu as separate XLA ops on the gathered
+              output (what per-layer model code used to do) — the
+              fused-vs-unfused delta is the epilogue-fusion win
 
 Per variant: per-device collective bytes (compiled HLO, loop-trip aware),
 analytic CGEMM/transform FLOPs from ConvSpec, roofline terms, plus measured
@@ -38,8 +43,11 @@ variant = spec["variant"]
 kw = dict(padding=spec["pad"], schedule="nfft", mesh=mesh)
 if variant == "wfft":
     kw["schedule"] = "wfft"
-elif variant == "nfft":
+elif variant in ("nfft", "nfft_ep_unfused"):
     pass
+elif variant == "nfft_ep_fused":
+    from repro.conv import Epilogue
+    kw["epilogue"] = Epilogue(bias=True, activation="relu")
 elif variant == "nfft_repG":
     kw["replicate_kernel_transform"] = True
 elif variant == "nfft_repG_bf16":
@@ -52,17 +60,38 @@ x = jnp.asarray(rng.standard_normal(
     (spec["B"], spec["C"], spec["H"], spec["W"])), jnp.float32)
 k = jnp.asarray(rng.standard_normal(
     (spec["Co"], spec["C"], spec["kh"], spec["kh"])), jnp.float32)
+b = jnp.asarray(rng.standard_normal((spec["Co"],)), jnp.float32)
 plan = plan_conv(x.shape, k.shape, **kw)
-f = jax.jit(plan)
-lowered = f.lower(x, k)
+if variant == "nfft_ep_fused":
+    f = jax.jit(lambda x, k, b: plan(x, k, bias=b))
+    f_args = (x, k, b)
+elif variant == "nfft_ep_unfused":
+    # the pre-fusion model-layer pattern: separate bias+relu ops on the
+    # already-gathered output, outside shard_map
+    f = jax.jit(lambda x, k, b: jax.nn.relu(
+        plan(x, k) + b[None, :, None, None]))
+    f_args = (x, k, b)
+else:
+    f = jax.jit(plan)
+    f_args = (x, k)
+lowered = f.lower(*f_args)
 comp = lowered.compile()
 coll = parse_collectives(comp.as_text())
 out = {"coll_bytes_dev": coll["total_bytes"], "counts": coll["counts"]}
 # prepared plan: stage 2 + (nfft) boundary a2a #2 amortized away — measure
 # the saving instead of asserting it.
 prepared = plan.prepare(k, weights_version=0)
-fp = jax.jit(prepared)
-coll_p = parse_collectives(fp.lower(x).compile().as_text())
+if variant == "nfft_ep_fused":
+    fp = jax.jit(lambda x, b: prepared(x, bias=b))
+    fp_args = (x, b)
+elif variant == "nfft_ep_unfused":
+    fp = jax.jit(lambda x, b: jax.nn.relu(
+        prepared(x) + b[None, :, None, None]))
+    fp_args = (x, b)
+else:
+    fp = jax.jit(prepared)
+    fp_args = (x,)
+coll_p = parse_collectives(fp.lower(*fp_args).compile().as_text())
 out["coll_bytes_dev_prepared"] = coll_p["total_bytes"]
 out["counts_prepared"] = coll_p["counts"]
 def _median_wall(fn, *args):
@@ -74,12 +103,13 @@ def _median_wall(fn, *args):
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts))
 if spec["measure"]:
-    out["wall_s"] = _median_wall(f, x, k)
-    out["wall_prepared_s"] = _median_wall(fp, x)
+    out["wall_s"] = _median_wall(f, *f_args)
+    out["wall_prepared_s"] = _median_wall(fp, *fp_args)
 print("RESULT" + json.dumps(out))
 """
 
-VARIANTS = ("wfft", "nfft", "nfft_repG", "nfft_repG_bf16", "nfft_4m")
+VARIANTS = ("wfft", "nfft", "nfft_ep_fused", "nfft_ep_unfused",
+            "nfft_repG", "nfft_repG_bf16", "nfft_4m")
 
 
 def run(layer, variant, *, ndev, nd, nm, measure, reps=3):
@@ -128,6 +158,15 @@ def main(argv=None):
         saved = ana["coll_bytes_dev"] - ana["coll_bytes_dev_prepared"]
         print(f"#   prepared amortizes {saved:.3e} collective bytes/dev "
               f"(stage-2 transform + its boundary movement)")
+    if {"nfft_ep_fused", "nfft_ep_unfused"} <= results.keys():
+        fu = results["nfft_ep_fused"]
+        un = results["nfft_ep_unfused"]
+        extra = (un["analysis"]["coll_bytes_dev"]
+                 - fu["analysis"]["coll_bytes_dev"])
+        dw = un["wall"]["wall_s"] - fu["wall"]["wall_s"]
+        print(f"# epilogue fusion: {extra:.3e} extra collective bytes/dev "
+              f"unfused (should be ~0 — the win is elementwise HBM "
+              f"traffic), wall delta {dw*1e6:+.0f}us/call")
     if args.json_out:
         with open(args.json_out, "w") as fh:
             json.dump(results, fh, indent=1)

@@ -1,40 +1,92 @@
 """Benchmark harness: one entry per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--json-out PATH]
 
-Prints ``name,us_per_call,derived`` CSV rows (plus context columns).
+Prints ``name,us_per_call,derived`` CSV rows (plus context columns) and
+writes the same numbers as machine-readable JSON (``BENCH_conv.json``:
+name -> us_per_call) so the perf trajectory accumulates across runs.
 Full-scale (arch x shape x mesh) numbers come from the dry-run
 (`repro.launch.dryrun --all`) and are summarised in EXPERIMENTS.md.
 """
 from __future__ import annotations
 
 import argparse
+import io
+import json
 import sys
 
 
-def main() -> None:
+class _Tee(io.TextIOBase):
+    """Pass stdout through while capturing it for CSV-row parsing."""
+
+    def __init__(self, wrapped):
+        self.wrapped = wrapped
+        self.captured = io.StringIO()
+
+    def write(self, s):
+        self.captured.write(s)
+        return self.wrapped.write(s)
+
+    def flush(self):
+        self.wrapped.flush()
+
+
+def parse_csv_rows(text: str) -> dict:
+    """``name,us_per_call[,...]`` rows -> {name: us_per_call} (header and
+    ``#`` comment lines skipped; non-numeric second columns skipped)."""
+    rows = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("#") or line.startswith("name,"):
+            continue
+        parts = line.split(",")
+        if len(parts) < 2:
+            continue
+        try:
+            rows[parts[0]] = float(parts[1])
+        except ValueError:
+            continue
+    return rows
+
+
+def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fewer layers / reps (CI-sized)")
-    args = ap.parse_args()
+    ap.add_argument("--json-out", default="BENCH_conv.json",
+                    help="machine-readable name->us_per_call output "
+                         "('' disables)")
+    args = ap.parse_args(argv)
 
-    from benchmarks import table1_layers, fig56_speedup, fig78_memrate
-    print("name,us_per_call,derived")
-    table1_layers.main(["--batch", "1", "--reps", "2"] if args.quick
-                       else ["--batch", "2", "--reps", "3"])
-    sys.stdout.flush()
-    fig56_speedup.main(["--quick", "--reps", "3"] if args.quick
-                       else ["--reps", "5"])
-    sys.stdout.flush()
-    fig78_memrate.main()
-    sys.stdout.flush()
-    _conv_roofline_rows()
+    tee = _Tee(sys.stdout)
+    sys.stdout = tee
+    try:
+        from benchmarks import table1_layers, fig56_speedup, fig78_memrate
+        print("name,us_per_call,derived")
+        table1_layers.main(["--batch", "1", "--reps", "2"] if args.quick
+                           else ["--batch", "2", "--reps", "3"])
+        sys.stdout.flush()
+        fig56_speedup.main(["--quick", "--reps", "3"] if args.quick
+                           else ["--reps", "5"])
+        sys.stdout.flush()
+        fig78_memrate.main()
+        sys.stdout.flush()
+        _conv_roofline_rows()
+        sys.stdout.flush()
+    finally:
+        sys.stdout = tee.wrapped
+
+    rows = parse_csv_rows(tee.captured.getvalue())
+    if args.json_out:
+        with open(args.json_out, "w") as fh:
+            json.dump(rows, fh, indent=1, sort_keys=True)
+        print(f"# wrote {len(rows)} entries to {args.json_out}")
+    return rows
 
 
 def _conv_roofline_rows():
     """§Perf conv hillclimb rows (from the saved production-mesh analysis;
     regenerate with `python -m benchmarks.conv_roofline`)."""
-    import json
     import os
     path = os.path.join(os.path.dirname(__file__), "..", "experiments",
                         "conv_roofline_vconv42.json")

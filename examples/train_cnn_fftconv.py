@@ -1,7 +1,8 @@
 """End-to-end driver #1: train a small CNN whose conv layers run through
-the paper's FFT-based convolution (plan-level VJP) via the plan/execute
-API, on synthetic images — then evaluate through *prepared* plans (the
-kernel transforms of the trained weights are cached once and reused).
+the paper's FFT-based convolution with the bias+ReLU epilogue FUSED into
+the pipeline (stage 4), via the plan/execute API — then evaluate through a
+*network plan*: every layer resolved in one pass, every kernel transform
+prepared once per weights version.
 
     PYTHONPATH=src python examples/train_cnn_fftconv.py --steps 60
 """
@@ -12,9 +13,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.conv import prepared_cache_info
+from repro.conv import (
+    Epilogue, NetworkConv, plan_network, prepared_cache_info,
+)
 from repro.data import DataConfig, image_batch
-from repro.models.layers import conv2d_planned
+from repro.models.layers import conv_block, maxpool2x2
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 
 
@@ -23,31 +26,44 @@ def init_params(key):
     init = lambda k, s: 0.1 * jax.random.normal(k, s, jnp.float32)
     return {
         "c1": init(ks[0], (16, 3, 3, 3)),
+        "b1": jnp.zeros((16,), jnp.float32),
         "c2": init(ks[1], (32, 16, 3, 3)),
+        "b2": jnp.zeros((32,), jnp.float32),
         "w": init(ks[2], (32 * 8 * 8, 10)),
         "b": jnp.zeros((10,), jnp.float32),
     }
 
 
-def _conv(x, k, *, weights_version=None):
-    # plan_conv is cached by shape: each layer geometry plans exactly once.
-    # During training the plan-level VJP differentiates x AND k; at eval a
-    # weights_version routes through a prepared plan (stage 2 cached).
-    return conv2d_planned(x, k, padding=1, backend="fft-xla",
-                          weights_version=weights_version)
-
-
-def forward(p, x, *, weights_version=None):
-    h = jax.nn.relu(_conv(x, p["c1"],
-                          weights_version=weights_version))     # 32x32
-    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
-                              (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
-    h = jax.nn.relu(_conv(h, p["c2"],
-                          weights_version=weights_version))     # 16x16
-    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
-                              (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+def forward(p, x):
+    # conv + bias + relu is ONE fused plan per layer: the epilogue runs
+    # inside the pipeline (stage 4), and the plan-level VJP differentiates
+    # x, k AND bias through the fusion.
+    h = conv_block(x, p["c1"], p["b1"], activation="relu",
+                   padding=1, backend="fft-xla")                # 32x32
+    h = maxpool2x2(h)
+    h = conv_block(h, p["c2"], p["b2"], activation="relu",
+                   padding=1, backend="fft-xla")                # 16x16
+    h = maxpool2x2(h)
     h = h.reshape(h.shape[0], -1)                               # 8x8x32
     return h @ p["w"] + p["b"]
+
+
+def eval_network(batch):
+    """The serving-side view of the same net: resolve both conv layers in
+    ONE planning pass (shared plan cache) with their fused epilogues."""
+    ep = Epilogue(bias=True, activation="relu")
+    return plan_network([
+        NetworkConv("c1", (batch, 3, 32, 32), (16, 3, 3, 3), padding=1,
+                    epilogue=ep),
+        NetworkConv("c2", (batch, 16, 16, 16), (32, 16, 3, 3), padding=1,
+                    epilogue=ep),
+    ], backend="fft-xla")
+
+
+def forward_prepared(p, prepared, x):
+    h = maxpool2x2(prepared["c1"](x, bias=p["b1"]))
+    h = maxpool2x2(prepared["c2"](h, bias=p["b2"]))
+    return h.reshape(h.shape[0], -1) @ p["w"] + p["b"]
 
 
 def main():
@@ -80,18 +96,29 @@ def main():
         params, opt, loss = step(params, opt, b["images"], b["labels"])
         if i % 10 == 0 or i == args.steps - 1:
             print(f"step {i:4d} loss {float(loss):.4f}")
-    # Eval through prepared plans: the trained kernels' transforms are
-    # computed once (keyed by the final step as weights_version) and every
-    # eval batch skips stage 2.
+    # biases learned THROUGH the fused epilogue (d_bias comes out of the
+    # plan-level VJP, not a separate op's grad)
+    assert float(jnp.max(jnp.abs(params["b1"]))) > 0, \
+        "bias never updated — fused-epilogue bias grad is broken"
+
+    # Eval through the network plan: both layers resolved in one pass and
+    # prepared once (keyed by the final step as weights_version); every
+    # eval batch skips stage 2 and runs the fused epilogue on the slab.
+    net = eval_network(args.batch)
+    prepared = net.prepare_all({"c1": params["c1"], "c2": params["c2"]},
+                               weights_version=args.steps)
     b = image_batch(dc, 10_000)
-    logits = forward(params, b["images"], weights_version=args.steps)
+    logits = forward_prepared(params, prepared, b["images"])
     acc = float(jnp.mean(jnp.argmax(logits, -1) == b["labels"]))
-    forward(params, b["images"], weights_version=args.steps)  # cache hits
+    # second sweep under the same version: pure prepared-cache hits
+    net.prepare_all({"c1": params["c1"], "c2": params["c2"]},
+                    weights_version=args.steps)
     info = prepared_cache_info()
     print(f"held-out acc {acc:.2f} ({time.time()-t0:.1f}s) — trained via "
-          "the plan-level VJP, evaluated via prepared plans "
-          f"(prepared cache: {info.hits} hits / {info.misses} misses)")
-    assert info.hits >= 2, "second eval pass should reuse prepared kernels"
+          "the plan-level VJP through fused epilogues, served via "
+          f"plan_network (prepared cache: {info.hits} hits / "
+          f"{info.misses} misses)")
+    assert info.hits >= 2, "re-preparing same version should hit the cache"
     assert float(loss) < 2.5, "training through FFT conv failed to learn"
 
 

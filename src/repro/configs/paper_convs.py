@@ -18,6 +18,31 @@ class ConvLayer:
 
 
 # name, C, C', H_i x W_i, k
+def network_convs(layers, batch, *, bias=True, activation="relu"):
+    """Table-I layers -> ``NetworkConv`` specs for ``repro.conv.plan_network``.
+
+    Each layer carries the fused conv+bias+activation epilogue the source
+    nets apply (VGG/AlexNet/ResNet all follow every conv with bias+ReLU),
+    so planning the network fuses the whole elementwise tail into stage 4.
+    """
+    from repro.conv import Epilogue, NetworkConv
+    ep = Epilogue(bias=bias, activation=activation)
+    return tuple(
+        NetworkConv(name=l.name,
+                    x_shape=(batch, l.C, l.H, l.W),
+                    k_shape=(l.Cout, l.C, l.kh, l.kw),
+                    padding=l.pad, epilogue=ep)
+        for l in layers)
+
+
+def vgg_network(batch, *, bias=True, activation="relu"):
+    """The VGG conv trunk of Table I as one plannable network (the per-block
+    max-pools between entries are elementwise-cheap and stay outside the
+    conv plans; the Table-I geometries already reflect the pooled sizes)."""
+    vgg = [l for l in TABLE1 if l.name.startswith("V")]
+    return network_convs(vgg, batch, bias=bias, activation=activation)
+
+
 TABLE1 = (
     ConvLayer("Vconv1.1", 3, 64, 224, 224, 3, 3),
     ConvLayer("Vconv1.2", 64, 64, 224, 224, 3, 3),

@@ -12,21 +12,26 @@ from repro.conv.registry import (
     BackendInfo, ScheduleInfo, register_backend, register_schedule,
     get_backend, get_schedule, available_backends, available_schedules,
 )
+from repro.conv.epilogue import Epilogue
 from repro.conv.plan import (
     ConvPlan, PreparedConv, plan_conv, conv2d,
     plan_cache_info, clear_plan_cache, plan_cache_capacity,
     prepared_cache_info, clear_prepared_cache,
 )
-from repro.conv.stages import stage_counts, reset_stage_counts
+from repro.conv.stages import stage_counts, reset_stage_counts, stage_trace
+from repro.conv.netplan import (
+    NetworkConv, NetworkPlan, PreparedNetwork, plan_network,
+)
 from repro.conv import backends as _backends
 
 _backends.register_builtin()
 
 __all__ = [
-    "ConvPlan", "PreparedConv", "plan_conv", "conv2d",
+    "ConvPlan", "PreparedConv", "plan_conv", "conv2d", "Epilogue",
+    "NetworkConv", "NetworkPlan", "PreparedNetwork", "plan_network",
     "plan_cache_info", "clear_plan_cache", "plan_cache_capacity",
     "prepared_cache_info", "clear_prepared_cache",
-    "stage_counts", "reset_stage_counts",
+    "stage_counts", "reset_stage_counts", "stage_trace",
     "BackendInfo", "ScheduleInfo",
     "register_backend", "register_schedule",
     "get_backend", "get_schedule",

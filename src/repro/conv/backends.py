@@ -11,23 +11,30 @@ Schedules:
 Backends:
   direct      lax.conv_general_dilated (the oracle path; wins for small
               channel counts / tiny kernels by the cost model).  Opaque
-              execute, native XLA autodiff.
+              execute, native XLA autodiff; the plan epilogue is applied
+              right after the conv (XLA fuses the elementwise tail).
   fft-xla     the paper's 4-stage pipeline composed from repro.conv.stages
               with the XLA einsum CGEMM.
   fft-pallas  the same stage graph with the hot CGEMM swapped for the
               Pallas TPU kernel (interpret mode on CPU); plan bm/bn/bk
-              select its blocks.
+              select its blocks.  On the ``local`` schedule a bias/
+              activation epilogue is fused into the ``dft_tile``
+              output-inverse kernel tail (the inverse never round-trips to
+              HBM before the elementwise pass).
 
-The two FFT backends differ *only* in the CGEMM stage op they inject into
-the pipeline — everything else (transforms, collectives, prepare/execute,
-the plan-level VJP) is shared composition, which is why both are
-differentiable on every schedule.
+The two FFT backends differ *only* in the stage ops they inject into the
+pipeline — everything else (transforms, collectives, prepare/execute, the
+plan-level VJP, epilogue fusion) is shared composition, which is why both
+are differentiable on every schedule.
 """
 from __future__ import annotations
 
 import functools
 
+import jax.numpy as jnp
+
 from repro.conv import stages
+from repro.conv.epilogue import apply_epilogue
 from repro.conv.registry import register_backend, register_schedule
 from repro.core import fftconv as F
 
@@ -38,9 +45,37 @@ def _pallas_cgemm_fn(plan):
                              bm=plan.bm, bn=plan.bn, bk=plan.bk)
 
 
-def _exec_direct(plan, x, k):
-    return F.conv2d_direct(x, k, padding=plan.padding,
-                           compute_dtype=plan.compute_dtype)
+def _pallas_fused_inverse(Zr, Zi, spec, epilogue, bias):
+    """Stage 4 through the fused dft_tile kernel: inverse DFT + bias +
+    activation in one VMEM-resident tail.
+
+    The activation runs on whole tiles before the overlap-save crop; the
+    crop only *selects* elements, so elementwise-before-crop equals
+    crop-then-elementwise on everything kept.
+    """
+    from repro.kernels.dft_tile import tile_ifft_epilogue_pallas
+    Zrt = F.z_to_tiles(Zr, spec)            # (B, C', X, Dl, d, dh)
+    Zit = F.z_to_tiles(Zi, spec)
+    B, Co, X, Dl = Zrt.shape[:4]
+    n = B * Co * X * Dl
+    d, dh = spec.delta, spec.delta_h
+    b = bias if bias is not None else jnp.zeros((Co,), Zr.dtype)
+    # one bias scalar per tile: broadcast over (B, ., X, Dl) tile indices
+    b_tile = jnp.broadcast_to(b.astype(Zr.dtype)[None, :, None, None],
+                              (B, Co, X, Dl)).reshape(n)
+    y = tile_ifft_epilogue_pallas(Zrt.reshape(n, d, dh),
+                                  Zit.reshape(n, d, dh), b_tile,
+                                  activation=epilogue.activation,
+                                  delta=d)
+    return F.assemble_output_tiles(y.reshape(B, Co, X, Dl, d, d), spec)
+
+
+def _exec_direct(plan, x, k, bias=None, residual=None):
+    y = F.conv2d_direct(x, k, padding=plan.padding,
+                        compute_dtype=plan.compute_dtype)
+    out_dtype = y.dtype
+    return apply_epilogue(y, plan.epilogue, bias=bias,
+                          residual=residual).astype(out_dtype)
 
 
 def _fft_xla_pipeline(plan):
@@ -48,7 +83,10 @@ def _fft_xla_pipeline(plan):
 
 
 def _fft_pallas_pipeline(plan):
-    return stages.pipeline_for(plan.schedule, cgemm_fn=_pallas_cgemm_fn(plan))
+    inverse_fn = _pallas_fused_inverse if plan.schedule == "local" else None
+    return stages.pipeline_for(plan.schedule,
+                               cgemm_fn=_pallas_cgemm_fn(plan),
+                               inverse_fn=inverse_fn)
 
 
 def register_builtin() -> None:
@@ -61,11 +99,12 @@ def register_builtin() -> None:
                       description="baseline: all-reduce inside the hot CGEMM")
 
     register_backend("direct", _exec_direct, schedules=("local",),
-                     native_autodiff=True,
+                     native_autodiff=True, supports_epilogue=True,
                      description="lax.conv_general_dilated")
     register_backend("fft-xla", pipeline_factory=_fft_xla_pipeline,
                      schedules=("local", "nfft", "wfft"),
                      description="FFT conv stage graph, XLA einsum CGEMM")
     register_backend("fft-pallas", pipeline_factory=_fft_pallas_pipeline,
                      schedules=("local", "nfft", "wfft"),
-                     description="FFT conv stage graph, Pallas CGEMM kernel")
+                     description="FFT conv stage graph, Pallas CGEMM kernel"
+                                 " (+ fused epilogue inverse on local)")

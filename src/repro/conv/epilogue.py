@@ -1,0 +1,110 @@
+"""Fused epilogue spec for the stage-graph convolution engine.
+
+The FFT pipeline is bandwidth-bound, not FLOP-bound (Zlateski et al.), so
+any extra elementwise pass over the output — bias add, activation,
+residual add — is pure wasted memory traffic.  An ``Epilogue`` freezes
+*which* elementwise tail a plan executes; the pipelines fuse it into stage
+4 (``stage_output_inverse``) on the local C'/N output slab, before the
+f32 -> x.dtype cast and before leaving ``shard_map``, so sharded schedules
+do the elementwise work on 1/N of the output with zero extra collectives
+and zero extra stage-op invocations.
+
+The operand *values* (the bias vector, the residual tensor) are execution
+arguments — ``plan(x, k, bias=b, residual=r)`` — only the *shape* of the
+epilogue lives in the plan (and therefore in the plan-cache key).
+
+Semantics (cuDNN-style runtime-fusion order):
+
+    y = activation(conv(x, k) + bias[None, :, None, None] + residual)
+
+i.e. the residual is added *before* the activation (the ResNet basic-block
+form ``relu(conv + shortcut)``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+# Activation registry: name -> elementwise callable.  ``gelu`` is the tanh
+# approximation so the Pallas kernel tail (no erf) matches bit-for-bit.
+ACTIVATIONS = {
+    "none": lambda y: y,
+    "relu": jax.nn.relu,
+    "gelu": functools.partial(jax.nn.gelu, approximate=True),
+    "silu": jax.nn.silu,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """Frozen spec of the elementwise tail fused into stage 4.
+
+    Hashable and part of the plan-cache key: two plans that differ only in
+    their epilogue are distinct cached programs.
+    """
+    bias: bool = False
+    activation: str = "none"        # "none" | "relu" | "gelu" | "silu"
+    residual: bool = False
+
+    def __post_init__(self):
+        if self.activation not in ACTIVATIONS:
+            raise ValueError(
+                f"unknown epilogue activation {self.activation!r}; "
+                f"available: {tuple(sorted(ACTIVATIONS))}")
+
+    @property
+    def is_noop(self) -> bool:
+        return (not self.bias and self.activation == "none"
+                and not self.residual)
+
+    def describe(self) -> str:
+        if self.is_noop:
+            return "none"
+        parts = []
+        if self.bias:
+            parts.append("bias")
+        if self.residual:
+            parts.append("residual")
+        if self.activation != "none":
+            parts.append(self.activation)
+        return "+".join(parts)
+
+
+def apply_epilogue(y, epilogue: Epilogue | None, *, bias=None, residual=None):
+    """Apply an epilogue to an output (or output slab) ``y``.
+
+    ``y`` is NCHW-like with channels on axis 1; under a sharded schedule it
+    is the *local* C'/N slab and ``bias``/``residual`` are the matching
+    local shards (shard_map splits them — no collectives).  Accumulates in
+    ``y``'s dtype (f32 at the fusion point, before the output cast).
+    """
+    if epilogue is None or epilogue.is_noop:
+        return y
+    if epilogue.bias:
+        y = y + bias.astype(y.dtype)[None, :, None, None]
+    if epilogue.residual:
+        y = y + residual.astype(y.dtype)
+    return ACTIVATIONS[epilogue.activation](y)
+
+
+def activation_vjp(epilogue: Epilogue, z, dy):
+    """Cotangent of the activation at pre-activation value ``z``.
+
+    Used by the plan-level VJP: the activation gradient is applied to the
+    incoming cotangent *before* it enters the transposed plan / the bias
+    reduction.
+    """
+    if epilogue.activation == "none":
+        return dy
+    _, vjp = jax.vjp(ACTIVATIONS[epilogue.activation], z)
+    (dz,) = vjp(dy.astype(z.dtype))
+    return dz
+
+
+def bias_grad(dz):
+    """d_bias: reduce the conv-output cotangent over batch and space."""
+    return jnp.sum(dz, axis=(0, 2, 3))

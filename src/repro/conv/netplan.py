@@ -1,0 +1,227 @@
+"""Whole-network convolution planning (``plan_network`` / ``NetworkPlan``).
+
+fbfft's lesson (Vasilache et al.) is that FFT convolution pays off when
+evaluated *network-wide*, not per-layer: the planning, the kernel
+transforms and the fused elementwise tails all amortize across the whole
+model.  This module resolves every conv layer of a model in ONE pass
+against the shared plan cache:
+
+    net = plan_network([
+        NetworkConv("conv1", x_shape, k_shape, padding=1,
+                    epilogue=Epilogue(bias=True, activation="relu")),
+        ...
+    ], backend="fft-xla", mesh=mesh, schedule="nfft")
+
+    # serving: one invalidation sweep per weight update
+    prepared = net.prepare_all(params, weights_version=step)
+    y = prepared["conv1"](x, bias=params["conv1/bias"])
+
+``prepare_all`` runs each layer's kernel transform exactly once per
+``weights_version`` (repeat calls under the same version hit the prepared
+cache; a new version after a weight update re-transforms everything in one
+sweep), which is the serving lifecycle the ROADMAP north-star wants.
+
+``NetworkPlan.report()`` aggregates trace-time stage-op and collective
+counts over the whole net, so "how many all_to_alls does one forward pass
+pay" is a queryable number instead of per-layer archaeology.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.conv.epilogue import Epilogue
+from repro.conv.plan import ConvPlan, PreparedConv, plan_conv
+from repro.conv.stages import stage_trace
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkConv:
+    """One conv layer of a model, as the network planner sees it.
+
+    Geometry + the layer's fused epilogue; everything else (backend,
+    schedule, mesh, precision) is shared network-wide via ``plan_network``
+    kwargs, with ``overrides`` as the per-layer escape hatch (e.g. a tiny
+    first layer that wants ``backend="direct"``).
+    """
+    name: str
+    x_shape: tuple
+    k_shape: tuple
+    padding: Any = 0
+    epilogue: Epilogue = Epilogue()
+    overrides: tuple = ()        # (("backend", "direct"), ...) — hashable
+
+    def plan_kwargs(self, shared: dict) -> dict:
+        kw = dict(shared)
+        kw.update(dict(self.overrides))
+        kw["padding"] = self.padding
+        kw["epilogue"] = self.epilogue
+        return kw
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PreparedNetwork:
+    """All layers of a ``NetworkPlan`` bound to prepared kernels.
+
+    Mapping-like: ``prepared["conv1"](x, bias=...)``.  Every layer shares
+    one ``weights_version``; re-prepare the network (not a layer) after a
+    weight update.
+    """
+    layers: "collections.OrderedDict[str, PreparedConv]"
+    weights_version: Any = None
+
+    def __getitem__(self, name: str) -> PreparedConv:
+        return self.layers[name]
+
+    def __iter__(self):
+        return iter(self.layers)
+
+    def __len__(self):
+        return len(self.layers)
+
+    def items(self):
+        return self.layers.items()
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class NetworkPlan:
+    """Every conv layer of a model resolved to a ``ConvPlan`` in one pass.
+
+    ``plans`` preserves layer order.  Same-geometry layers resolve to the
+    *same* cached ``ConvPlan`` object (the shared plan cache deduplicates),
+    so planning cost scales with distinct geometries, not layer count.
+    """
+    plans: "collections.OrderedDict[str, ConvPlan]"
+
+    def __getitem__(self, name: str) -> ConvPlan:
+        return self.plans[name]
+
+    def __iter__(self):
+        return iter(self.plans)
+
+    def __len__(self):
+        return len(self.plans)
+
+    def items(self):
+        return self.plans.items()
+
+    @property
+    def layer_names(self) -> tuple:
+        return tuple(self.plans)
+
+    # ---- serving ----------------------------------------------------------
+    def prepare_all(self, params: Mapping[str, Any], *,
+                    weights_version=None) -> PreparedNetwork:
+        """Prepare every layer's kernel under one ``weights_version``.
+
+        ``params`` maps layer name -> kernel array (extra keys — biases,
+        dense weights — are ignored, so a model's full param dict works).
+        The kernel transform runs exactly once per layer per version:
+        repeat calls with the same version return memoized
+        ``PreparedConv`` objects from the prepared cache; a new version is
+        one invalidation sweep re-transforming the whole net.
+        """
+        missing = [n for n in self.plans if n not in params]
+        if missing:
+            raise ValueError(
+                f"prepare_all: params missing kernels for layers {missing}")
+        layers = collections.OrderedDict(
+            (name, plan.prepare(params[name],
+                                weights_version=weights_version))
+            for name, plan in self.plans.items())
+        return PreparedNetwork(layers=layers,
+                               weights_version=weights_version)
+
+    # ---- introspection ----------------------------------------------------
+    def report(self) -> dict:
+        """Aggregate trace-time stage-op and collective counts for one
+        forward pass of the whole net (one-shot plans), plus cost-model
+        FLOPs.  Collectives are counted from each layer's traced program
+        (``all_to_all`` / ``psum`` equation counts), so the number reflects
+        what actually executes, schedule by schedule."""
+        per_layer = {}
+        total_stages: collections.Counter = collections.Counter()
+        total_coll: collections.Counter = collections.Counter()
+        total_flops = 0
+        for name, plan in self.plans.items():
+            args = [jax.ShapeDtypeStruct(plan.x_shape, jnp.float32),
+                    jax.ShapeDtypeStruct(plan.k_shape, jnp.float32)]
+            kwargs = {}
+            if plan.epilogue.bias:
+                kwargs["bias"] = jax.ShapeDtypeStruct(
+                    (plan.spec.Cout,), jnp.float32)
+            if plan.epilogue.residual:
+                kwargs["residual"] = jax.ShapeDtypeStruct(
+                    plan.out_shape, jnp.float32)
+            with stage_trace() as stages:
+                jaxpr = jax.make_jaxpr(
+                    lambda x, k: plan(x, k, **kwargs))(*args)
+            text = str(jaxpr)
+            coll = {"all_to_all": text.count("all_to_all"),
+                    "psum": text.count("psum[")}
+            flops = plan.flops()
+            per_layer[name] = {
+                "backend": plan.backend, "schedule": plan.schedule,
+                "epilogue": plan.epilogue.describe(),
+                "stage_counts": dict(stages), "collectives": coll,
+                "flops": flops,
+            }
+            total_stages.update(stages)
+            total_coll.update(coll)
+            total_flops += flops
+        return {
+            "layers": per_layer,
+            "total_stage_counts": dict(total_stages),
+            "total_collectives": dict(total_coll),
+            "total_flops": total_flops,
+            "n_layers": len(self.plans),
+            "n_distinct_plans": len({id(p) for p in self.plans.values()}),
+        }
+
+    def describe(self) -> str:
+        rep = self.report()
+        lines = [f"NetworkPlan: {rep['n_layers']} layers, "
+                 f"{rep['n_distinct_plans']} distinct plans, "
+                 f"{rep['total_flops']:.3e} FLOPs/pass"]
+        for name, r in rep["layers"].items():
+            coll = ", ".join(f"{k}={v}" for k, v in r["collectives"].items()
+                             if v) or "none"
+            lines.append(
+                f"  {name}: {r['backend']}/{r['schedule']} "
+                f"epilogue={r['epilogue']} collectives: {coll}")
+        t = rep["total_collectives"]
+        lines.append(f"  total collectives/pass: "
+                     f"all_to_all={t.get('all_to_all', 0)} "
+                     f"psum={t.get('psum', 0)}")
+        return "\n".join(lines)
+
+
+def plan_network(layers: Sequence[NetworkConv], *, backend: str = "auto",
+                 schedule: str = "auto", mesh=None, delta: int = 16,
+                 three_m: bool = True, compute_dtype=None,
+                 data_axis: str = "data", model_axis: str = "model",
+                 replicate_kernel_transform: bool = False) -> NetworkPlan:
+    """Resolve every conv layer of a model in one planning pass.
+
+    All layers share the network-wide knobs given here (backend, schedule,
+    mesh, precision); a ``NetworkConv.overrides`` tuple adjusts individual
+    layers.  Resolution goes through the shared ``plan_conv`` cache, so
+    same-geometry layers (and repeat ``plan_network`` calls) share frozen
+    ``ConvPlan`` objects.
+    """
+    names = [l.name for l in layers]
+    dupes = [n for n, c in collections.Counter(names).items() if c > 1]
+    if dupes:
+        raise ValueError(f"duplicate layer names: {dupes}")
+    shared = dict(backend=backend, schedule=schedule, mesh=mesh, delta=delta,
+                  three_m=three_m, compute_dtype=compute_dtype,
+                  data_axis=data_axis, model_axis=model_axis,
+                  replicate_kernel_transform=replicate_kernel_transform)
+    plans = collections.OrderedDict(
+        (l.name, plan_conv(l.x_shape, l.k_shape, **l.plan_kwargs(shared)))
+        for l in layers)
+    return NetworkPlan(plans=plans)

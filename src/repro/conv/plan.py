@@ -39,6 +39,7 @@ from typing import Any, Optional
 from repro.core.conv_spec import ConvSpec
 from repro.conv import registry
 from repro.conv import autodiff
+from repro.conv.epilogue import Epilogue
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,17 +63,25 @@ class ConvPlan:
     data_axis: str = "data"
     model_axis: str = "model"
     replicate_kernel_transform: bool = False
+    epilogue: Epilogue = Epilogue()    # fused elementwise tail (stage 4)
 
     # ---- execution --------------------------------------------------------
-    def __call__(self, x, k):
+    def __call__(self, x, k, *, bias=None, residual=None):
+        """Execute the plan.  Plans with a non-noop ``epilogue`` take the
+        epilogue *operands* here: ``plan(x, k, bias=b, residual=r)`` —
+        fused into stage 4 inside the pipeline (sharded schedules touch
+        only their local 1/N output slab, zero extra collectives)."""
         self._check_x(x)
         if tuple(k.shape) != self.k_shape:
             raise ValueError(
                 f"plan was built for kernel {self.k_shape}, got "
                 f"{tuple(k.shape)}; call plan_conv for the new geometry")
+        self._check_epilogue_operands(bias, residual)
         be = registry.get_backend(self.backend)
         if be.pipeline_factory is not None:
-            return autodiff.pipeline_conv(self, x, k)
+            return autodiff.pipeline_conv(self, x, k, bias, residual)
+        if not self.epilogue.is_noop:
+            return be.execute(self, x, k, bias=bias, residual=residual)
         return be.execute(self, x, k)
 
     def _check_x(self, x):
@@ -80,6 +89,26 @@ class ConvPlan:
             raise ValueError(
                 f"plan was built for input {self.x_shape}, got "
                 f"{tuple(x.shape)}; call plan_conv for the new geometry")
+
+    def _check_epilogue_operands(self, bias, residual):
+        ep = self.epilogue
+        if ep.bias != (bias is not None):
+            raise ValueError(
+                f"plan epilogue declares bias={ep.bias} but bias "
+                f"{'was not' if ep.bias else 'was'} passed at execution")
+        if ep.residual != (residual is not None):
+            raise ValueError(
+                f"plan epilogue declares residual={ep.residual} but "
+                f"residual {'was not' if ep.residual else 'was'} passed "
+                "at execution")
+        if bias is not None and tuple(bias.shape) != (self.spec.Cout,):
+            raise ValueError(
+                f"epilogue bias must have shape ({self.spec.Cout},), got "
+                f"{tuple(bias.shape)}")
+        if residual is not None and tuple(residual.shape) != self.out_shape:
+            raise ValueError(
+                f"epilogue residual must match the output {self.out_shape},"
+                f" got {tuple(residual.shape)}")
 
     # ---- prepare/execute split --------------------------------------------
     def prepare(self, k, *, weights_version=None) -> "PreparedConv":
@@ -172,7 +201,8 @@ class ConvPlan:
         lines = [
             f"ConvPlan {self.x_shape} * {self.k_shape} -> {self.out_shape}",
             f"  backend={self.backend} schedule={self.schedule} "
-            f"three_m={self.three_m} delta={s.delta}",
+            f"three_m={self.three_m} delta={s.delta} "
+            f"epilogue={self.epilogue.describe()}",
             f"  cost-model FLOPs: direct {s.direct_flops():.3e}, "
             f"fft {s.cgemm_flops(three_m=self.three_m) + s.transform_flops():.3e}",
         ]
@@ -203,11 +233,15 @@ class PreparedConv:
     kernel: Any = None                  # original k (for the x-grad VJP)
     weights_version: Any = None
 
-    def __call__(self, x):
+    def __call__(self, x, *, bias=None, residual=None):
         self.plan._check_x(x)
+        self.plan._check_epilogue_operands(bias, residual)
         be = registry.get_backend(self.plan.backend)
         if be.pipeline_factory is not None:
-            return autodiff.prepared_conv(self, x)
+            return autodiff.prepared_conv(self, x, bias, residual)
+        if not self.plan.epilogue.is_noop:
+            return be.execute(self.plan, x, self.state, bias=bias,
+                              residual=residual)
         return be.execute(self.plan, x, self.state)
 
     @property
@@ -306,7 +340,7 @@ def _auto_backend(spec: ConvSpec, three_m: bool) -> str:
 
 def _resolve(x_shape, k_shape, padding, delta, backend, schedule, mesh,
              three_m, bm, bn, bk, compute_dtype, data_axis, model_axis,
-             replicate_kernel_transform) -> ConvPlan:
+             replicate_kernel_transform, epilogue) -> ConvPlan:
     B, C, H, W = x_shape
     Cout, C2, kh, kw = k_shape
     if C != C2:
@@ -358,12 +392,18 @@ def _resolve(x_shape, k_shape, padding, delta, backend, schedule, mesh,
         raise ValueError(
             f"backend {backend!r} does not support schedule {schedule!r} "
             f"(supported: {be.schedules})")
+    if not epilogue.is_noop and not be.epilogue_capable:
+        raise ValueError(
+            f"backend {backend!r} cannot fuse an epilogue "
+            f"({epilogue.describe()}); register it with "
+            "supports_epilogue=True or use a stage-pipeline backend")
 
     return ConvPlan(spec=spec, backend=backend, schedule=schedule,
                     padding=padding, three_m=three_m, bm=bm, bn=bn, bk=bk,
                     compute_dtype=compute_dtype, mesh=mesh,
                     data_axis=data_axis, model_axis=model_axis,
-                    replicate_kernel_transform=replicate_kernel_transform)
+                    replicate_kernel_transform=replicate_kernel_transform,
+                    epilogue=epilogue)
 
 
 def plan_conv(x_shape, k_shape, *, padding=0, delta: int = 16,
@@ -372,6 +412,7 @@ def plan_conv(x_shape, k_shape, *, padding=0, delta: int = 16,
               compute_dtype=None, data_axis: str = "data",
               model_axis: str = "model",
               replicate_kernel_transform: bool = False,
+              epilogue: Optional[Epilogue] = None,
               cache: bool = True) -> ConvPlan:
     """Create (or fetch from the plan cache) a ``ConvPlan``.
 
@@ -395,6 +436,10 @@ def plan_conv(x_shape, k_shape, *, padding=0, delta: int = 16,
         bytes.
       replicate_kernel_transform: nfft only — replicate the cheap kernel
         transform on every model rank instead of all-to-all-ing it.
+      epilogue: ``Epilogue`` fused into stage 4 (bias add, activation,
+        residual add) on the local output slab, before the output dtype
+        cast — zero extra collectives, zero extra stage ops.  The operand
+        values are execution arguments: ``plan(x, k, bias=b, residual=r)``.
       cache: memoize the plan under its argument key (bounded LRU, see
         ``plan_cache_capacity``).
 
@@ -405,9 +450,10 @@ def plan_conv(x_shape, k_shape, *, padding=0, delta: int = 16,
     global _cache_hits, _cache_misses
     x_shape, k_shape = tuple(map(int, x_shape)), tuple(map(int, k_shape))
     padding = _normalize_padding(padding)
+    epilogue = Epilogue() if epilogue is None else epilogue
     key = (x_shape, k_shape, padding, delta, backend, schedule,
            _mesh_cache_key(mesh), three_m, bm, bn, bk, compute_dtype,
-           data_axis, model_axis, replicate_kernel_transform)
+           data_axis, model_axis, replicate_kernel_transform, epilogue)
     if cache:
         with _cache_lock:
             plan = _plan_cache.get(key)
@@ -417,7 +463,7 @@ def plan_conv(x_shape, k_shape, *, padding=0, delta: int = 16,
                 return plan
     plan = _resolve(x_shape, k_shape, padding, delta, backend, schedule,
                     mesh, three_m, bm, bn, bk, compute_dtype, data_axis,
-                    model_axis, replicate_kernel_transform)
+                    model_axis, replicate_kernel_transform, epilogue)
     if cache:
         with _cache_lock:
             _cache_misses += 1

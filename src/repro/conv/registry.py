@@ -23,7 +23,11 @@ A backend is registered in one of two forms:
     Differentiability is whatever the callable supports: pass
     ``native_autodiff=True`` if jax can differentiate straight through it
     (like the built-in ``direct``), or declare an explicit
-    ``differentiable=(...)`` subset.
+    ``differentiable=(...)`` subset.  Likewise fused-``Epilogue`` support
+    is derived for stage pipelines but declared for opaque backends
+    (``supports_epilogue=True`` + an ``execute(plan, x, k, bias=...,
+    residual=...)`` signature); plans with a non-noop epilogue refuse to
+    resolve to a backend that can't fuse it.
 """
 from __future__ import annotations
 
@@ -40,6 +44,7 @@ class BackendInfo:
     pipeline_factory: Optional[Callable] = None  # (plan) -> StagePipeline
     native_autodiff: bool = False  # jax differentiates execute directly
     declared_differentiable: tuple = ()          # opaque backends only
+    declared_supports_epilogue: bool = False     # opaque backends only
     description: str = ""
 
     @property
@@ -51,6 +56,16 @@ class BackendInfo:
         if self.pipeline_factory is not None or self.native_autodiff:
             return self.schedules
         return self.declared_differentiable
+
+    @property
+    def epilogue_capable(self) -> bool:
+        """Whether plans with a non-noop ``Epilogue`` may resolve to this
+        backend — *derived* for stage pipelines (the stage graph fuses the
+        epilogue into stage 4 on every schedule); opaque backends must
+        declare ``supports_epilogue=True`` and accept
+        ``execute(plan, x, k, bias=..., residual=...)``."""
+        return self.pipeline_factory is not None \
+            or self.declared_supports_epilogue
 
     def make_pipeline(self, plan):
         if self.pipeline_factory is None:
@@ -82,6 +97,7 @@ def register_schedule(name: str, *, requires_mesh: bool,
 def register_backend(name: str, execute: Optional[Callable] = None, *,
                      schedules, pipeline_factory: Optional[Callable] = None,
                      native_autodiff: bool = False, differentiable=(),
+                     supports_epilogue: bool = False,
                      description: str = "") -> BackendInfo:
     if (execute is None) == (pipeline_factory is None):
         raise ValueError(
@@ -97,6 +113,7 @@ def register_backend(name: str, execute: Optional[Callable] = None, *,
                        pipeline_factory=pipeline_factory,
                        native_autodiff=native_autodiff,
                        declared_differentiable=tuple(differentiable),
+                       declared_supports_epilogue=supports_epilogue,
                        description=description)
     _BACKENDS[name] = info
     return info

@@ -15,6 +15,13 @@ partitioning), ``wfft`` leaves the contraction axis sharded and pays a
 counted wrappers over ``repro.core.fftconv``) plus one pipeline class per
 schedule.
 
+Every pipeline accepts a plan-frozen ``Epilogue`` (bias add, activation,
+residual add — see ``repro.conv.epilogue``) executed *inside* stage 4 on
+the local output slab: zero extra collectives (the operands enter
+``shard_map`` pre-sharded), zero extra stage-op invocations (the
+elementwise tail rides the existing ``output_inverse`` op), and the work
+happens before the f32 -> x.dtype cast.
+
 Every pipeline exposes the prepare/execute split:
 
   ``prepare(plan, k)``   run stage 2 once, returning the transformed kernel
@@ -26,13 +33,22 @@ Every pipeline exposes the prepare/execute split:
                          a prepared ``G``;
   ``full(plan, x, k)``   the one-shot path: stage 2 inline.
 
-Stage-op invocations are counted at trace time (``stage_counts()``), which
-is what the amortization tests assert against.
+Stage-op invocations are counted at trace time.  Prefer the thread-safe
+context manager::
+
+    with stage_trace() as counts:
+        jax.make_jaxpr(plan)(x, k)
+    assert counts["cgemm"] == 1
+
+``stage_counts()`` / ``reset_stage_counts()`` remain as shims over a
+process-global counter (lock-guarded) for existing callers.
 """
 from __future__ import annotations
 
 import collections
+import contextlib
 import functools
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -42,49 +58,106 @@ from repro.compat import shard_map
 from repro.core.conv_spec import ConvSpec
 from repro.core import fftconv as F
 from repro.core.cgemm import cgemm
+from repro.conv.epilogue import Epilogue, apply_epilogue
+
+
+# --------------------------------------------------------------------------
+# Stage-op trace counters (thread-safe, context-managed)
+# --------------------------------------------------------------------------
+
+_trace_lock = threading.Lock()
+_global_counts: collections.Counter = collections.Counter()
+_tls = threading.local()                 # per-thread stack of active traces
+
+
+def _count(name: str) -> None:
+    with _trace_lock:
+        _global_counts[name] += 1
+    for counter in getattr(_tls, "stack", ()):
+        counter[name] += 1
+
+
+@contextlib.contextmanager
+def stage_trace():
+    """Scoped, thread-local stage-op counter.
+
+    Counts only the stage ops traced by *this* thread while the context is
+    active, so concurrent planners/tracers don't bleed into each other
+    (the module-global counter behind ``stage_counts()`` is shared).
+    Nested traces each observe the ops traced inside them.
+    """
+    counts: collections.Counter = collections.Counter()
+    stack = getattr(_tls, "stack", None)
+    if stack is None:
+        stack = _tls.stack = []
+    stack.append(counts)
+    try:
+        yield counts
+    finally:
+        # remove by IDENTITY: ``with`` exits are LIFO, and equality-based
+        # removal would pop the wrong Counter when two traces hold equal
+        # contents (e.g. both still empty)
+        for i in range(len(stack) - 1, -1, -1):
+            if stack[i] is counts:
+                del stack[i]
+                break
+
+
+def stage_counts() -> dict:
+    """Process-global trace-time invocation counts per stage op (shim —
+    prefer ``stage_trace()`` for isolation)."""
+    with _trace_lock:
+        return dict(_global_counts)
+
+
+def reset_stage_counts() -> None:
+    with _trace_lock:
+        _global_counts.clear()
 
 
 # --------------------------------------------------------------------------
 # Stage ops (counted)
 # --------------------------------------------------------------------------
 
-_stage_counts: collections.Counter = collections.Counter()
-
-
-def stage_counts() -> dict:
-    """Trace-time invocation counts per stage op (and boundary a2a)."""
-    return dict(_stage_counts)
-
-
-def reset_stage_counts() -> None:
-    _stage_counts.clear()
-
-
 def stage_input_transform(x, spec: ConvSpec):
-    _stage_counts["input_transform"] += 1
+    _count("input_transform")
     return F.input_transform(x, spec)
 
 
 def stage_kernel_transform(k, spec: ConvSpec):
-    _stage_counts["kernel_transform"] += 1
+    _count("kernel_transform")
     return F.kernel_transform(k, spec)
 
 
 def stage_cgemm(Dr, Di, Gr, Gi, *, three_m: bool, cgemm_fn=None):
-    _stage_counts["cgemm"] += 1
+    _count("cgemm")
     mm = cgemm_fn if cgemm_fn is not None else functools.partial(
         cgemm, three_m=three_m)
     return mm(Dr, Di, Gr, Gi)
 
 
-def stage_output_inverse(Zr, Zi, spec: ConvSpec):
-    _stage_counts["output_inverse"] += 1
-    return F.output_inverse(Zr, Zi, spec)
+def stage_output_inverse(Zr, Zi, spec: ConvSpec, *, epilogue: Epilogue = None,
+                         bias=None, residual=None, inverse_fn=None):
+    """Stage 4 with the fused elementwise epilogue.
+
+    The epilogue rides inside this single stage op (the counter increments
+    once, fused or not).  ``inverse_fn`` is a backend-supplied fused
+    inverse+epilogue kernel ``(Zr, Zi, spec, epilogue, bias) -> y`` (the
+    Pallas ``dft_tile`` tail); it cannot fold a residual — the residual
+    lives in output layout, not tile layout — so residual epilogues fall
+    back to the composed path.
+    """
+    _count("output_inverse")
+    if (inverse_fn is not None and epilogue is not None
+            and not epilogue.is_noop and not epilogue.residual):
+        return inverse_fn(Zr, Zi, spec, epilogue, bias)
+    y = F.output_inverse(Zr, Zi, spec)
+    return apply_epilogue(y, epilogue, bias=bias, residual=residual)
 
 
 def _boundary_a2a(Tr, Ti, axis_name, split, concat):
     """One nfft stage-boundary all-to-all (re/im pair, counted once)."""
-    _stage_counts["boundary_a2a"] += 1
+    _count("boundary_a2a")
     Tr = jax.lax.all_to_all(Tr, axis_name, split, concat, tiled=True)
     Ti = jax.lax.all_to_all(Ti, axis_name, split, concat, tiled=True)
     return Tr, Ti
@@ -130,20 +203,51 @@ def _maybe_cast(pair, dtype):
     return pair[0].astype(dtype), pair[1].astype(dtype)
 
 
+def _epilogue_operands(plan, bias, residual):
+    """Pad + spec the epilogue operands for shard_map entry.
+
+    Bias is C'-sharded over the model axis and the residual is sharded
+    exactly like the output, so the epilogue costs ZERO collectives: every
+    rank receives precisely the slab its local stage-4 output needs.
+    """
+    ep = plan.epilogue
+    n_data = plan.mesh.shape[plan.data_axis]
+    n_model = plan.mesh.shape[plan.model_axis]
+    args, specs = [], []
+    if ep.bias:
+        args.append(_pad_axis(bias, 0, n_model))
+        specs.append(P(plan.model_axis))
+    if ep.residual:
+        args.append(_pad_axis(_pad_axis(residual, 0, n_data), 1, n_model))
+        specs.append(P(plan.data_axis, plan.model_axis, None, None))
+    return tuple(args), tuple(specs)
+
+
+def _unpack_epilogue_args(plan, ep_args):
+    ep = plan.epilogue
+    it = iter(ep_args)
+    bias = next(it) if ep.bias else None
+    residual = next(it) if ep.residual else None
+    return bias, residual
+
+
 # --------------------------------------------------------------------------
 # local schedule
 # --------------------------------------------------------------------------
 
 class LocalPipeline:
-    """Single device: stages back-to-back, no collectives."""
+    """Single device: stages back-to-back, no collectives.  The epilogue is
+    fused into stage 4; ``inverse_fn`` (Pallas backend) fuses it into the
+    tile-inverse kernel tail itself."""
 
-    def __init__(self, cgemm_fn=None):
+    def __init__(self, cgemm_fn=None, inverse_fn=None):
         self.cgemm_fn = cgemm_fn
+        self.inverse_fn = inverse_fn
 
     def prepare(self, plan, k):
         return stage_kernel_transform(k, plan.spec)
 
-    def execute(self, plan, x, G):
+    def execute(self, plan, x, G, bias=None, residual=None):
         spec = plan.spec
         Dr, Di = stage_input_transform(x, spec)
         Gr, Gi = G
@@ -152,10 +256,14 @@ class LocalPipeline:
         Zr, Zi = stage_cgemm(Dr, Di, Gr, Gi, three_m=plan.three_m,
                              cgemm_fn=self.cgemm_fn)
         Zr, Zi = Zr.astype(jnp.float32), Zi.astype(jnp.float32)
-        return stage_output_inverse(Zr, Zi, spec).astype(x.dtype)
+        y = stage_output_inverse(Zr, Zi, spec, epilogue=plan.epilogue,
+                                 bias=bias, residual=residual,
+                                 inverse_fn=self.inverse_fn)
+        return y.astype(x.dtype)
 
-    def full(self, plan, x, k):
-        return self.execute(plan, x, self.prepare(plan, k))
+    def full(self, plan, x, k, bias=None, residual=None):
+        return self.execute(plan, x, self.prepare(plan, k), bias=bias,
+                            residual=residual)
 
 
 # --------------------------------------------------------------------------
@@ -166,23 +274,28 @@ class NfftPipeline:
     """Transforms where the data lives; one all-to-all per stage boundary;
     collective-free hot CGEMM.  Prepared form: ``G`` in the post-boundary
     layout — global (P, C, C') with the P axis sharded over ``model`` — so
-    prepared execution skips stage 2 and boundary a2a #2 entirely."""
+    prepared execution skips stage 2 and boundary a2a #2 entirely.  The
+    epilogue runs inside the body on each rank's C'/N stage-4 slab."""
 
-    def __init__(self, cgemm_fn=None):
+    def __init__(self, cgemm_fn=None, inverse_fn=None):
         self.cgemm_fn = cgemm_fn
+        # inverse_fn is a local-schedule fusion (tile-kernel tail); the
+        # sharded bodies fuse the epilogue at the stage level instead.
 
     # ---- bodies (per-device, under shard_map) -----------------------------
 
-    def _body_full(self, x, k, *, plan, spec, n_model):
+    def _body_full(self, x, k, *ep_args, plan, spec, n_model):
         """x: (B_loc, C_loc, H, W); k: C'-sharded (or replicated)."""
         Dr, Di = self._stage1_and_boundary1(x, plan, spec)
         Gr, Gi = self._stage2(k, plan, spec, n_model)
-        return self._hot_and_tail(x, Dr, Di, Gr, Gi, plan, spec, n_model)
+        return self._hot_and_tail(x, Dr, Di, Gr, Gi, ep_args, plan, spec,
+                                  n_model)
 
-    def _body_prepared(self, x, Gr, Gi, *, plan, spec, n_model):
+    def _body_prepared(self, x, Gr, Gi, *ep_args, plan, spec, n_model):
         """x: (B_loc, C_loc, H, W); Gr/Gi: the local (P/N, C, C') slab."""
         Dr, Di = self._stage1_and_boundary1(x, plan, spec)
-        return self._hot_and_tail(x, Dr, Di, Gr, Gi, plan, spec, n_model)
+        return self._hot_and_tail(x, Dr, Di, Gr, Gi, ep_args, plan, spec,
+                                  n_model)
 
     def _stage1_and_boundary1(self, x, plan, spec):
         b_loc, c_loc = x.shape[0], x.shape[1]
@@ -213,7 +326,7 @@ class NfftPipeline:
         # Boundary a2a #2: (P, C, C'_loc) -> (P/N, C, C')
         return _boundary_a2a(Gr, Gi, plan.model_axis, 0, 2)
 
-    def _hot_and_tail(self, x, Dr, Di, Gr, Gi, plan, spec, n_model):
+    def _hot_and_tail(self, x, Dr, Di, Gr, Gi, ep_args, plan, spec, n_model):
         b_loc, c_full = x.shape[0], spec.C
         # Stage 3 (HOT): local P/N-slab complex GEMM — no collectives.
         Gr, Gi = _maybe_cast((Gr, Gi), plan.compute_dtype)
@@ -225,9 +338,13 @@ class NfftPipeline:
         # (P/N, M_loc, C') -> (P, M_loc, C'/N)
         Zr, Zi = _boundary_a2a(Zr, Zi, plan.model_axis, 2, 0)
         Zr, Zi = Zr.astype(jnp.float32), Zi.astype(jnp.float32)
-        # Stage 4: each model rank inverts its C'/N output-channel slab.
+        # Stage 4: each model rank inverts its C'/N output-channel slab and
+        # applies the fused epilogue on that 1/N slab (pre-sharded operands,
+        # zero collectives), before the output dtype cast.
+        bias, residual = _unpack_epilogue_args(plan, ep_args)
         sp4 = _local_spec(spec, b_loc, c_full, spec.Cout // n_model)
-        return stage_output_inverse(Zr, Zi, sp4)
+        return stage_output_inverse(Zr, Zi, sp4, epilogue=plan.epilogue,
+                                    bias=bias, residual=residual)
 
     # ---- global entry points ----------------------------------------------
 
@@ -238,39 +355,43 @@ class NfftPipeline:
         kp = _pad_axis(_pad_axis(k, 0, n_model), 1, n_model)
         return stage_kernel_transform(kp, spec)
 
-    def execute(self, plan, x, G):
+    def execute(self, plan, x, G, bias=None, residual=None):
         spec = padded_sharded_spec(plan)
         mesh = plan.mesh
         n_model = mesh.shape[plan.model_axis]
         xp = _pad_axis(_pad_axis(x, 0, mesh.shape[plan.data_axis]), 1,
                        n_model)
         Gr, Gi = G
+        ep_args, ep_specs = _epilogue_operands(plan, bias, residual)
         body = functools.partial(self._body_prepared, plan=plan, spec=spec,
                                  n_model=n_model)
         in_specs = (P(plan.data_axis, plan.model_axis, None, None),
                     P(plan.model_axis, None, None),    # G: P-slab per rank
-                    P(plan.model_axis, None, None))
+                    P(plan.model_axis, None, None),
+                    *ep_specs)
         out_spec = P(plan.data_axis, plan.model_axis, None, None)
         y = shard_map(body, mesh=mesh, in_specs=in_specs,
-                      out_specs=out_spec)(xp, Gr, Gi)
+                      out_specs=out_spec)(xp, Gr, Gi, *ep_args)
         return y[:plan.spec.B, :plan.spec.Cout].astype(x.dtype)
 
-    def full(self, plan, x, k):
+    def full(self, plan, x, k, bias=None, residual=None):
         spec = padded_sharded_spec(plan)
         mesh = plan.mesh
         n_model = mesh.shape[plan.model_axis]
         xp = _pad_axis(_pad_axis(x, 0, mesh.shape[plan.data_axis]), 1,
                        n_model)
         kp = _pad_axis(_pad_axis(k, 0, n_model), 1, n_model)
+        ep_args, ep_specs = _epilogue_operands(plan, bias, residual)
         body = functools.partial(self._body_full, plan=plan, spec=spec,
                                  n_model=n_model)
         k_spec = P(None, None, None, None) \
             if plan.replicate_kernel_transform \
             else P(plan.model_axis, None, None, None)   # k: C' sharded
-        in_specs = (P(plan.data_axis, plan.model_axis, None, None), k_spec)
+        in_specs = (P(plan.data_axis, plan.model_axis, None, None), k_spec,
+                    *ep_specs)
         out_spec = P(plan.data_axis, plan.model_axis, None, None)
         y = shard_map(body, mesh=mesh, in_specs=in_specs,
-                      out_specs=out_spec)(xp, kp)
+                      out_specs=out_spec)(xp, kp, *ep_args)
         return y[:plan.spec.B, :plan.spec.Cout].astype(x.dtype)
 
 
@@ -281,12 +402,13 @@ class NfftPipeline:
 class WfftPipeline:
     """No tuple partitioning: the CGEMM contracts a channel axis spread over
     ``model``, so a psum (all-reduce of the whole Z) sits inside the hot
-    stage.  Prepared form: global (P, C, C') with the C axis sharded."""
+    stage.  Prepared form: global (P, C, C') with the C axis sharded.  The
+    epilogue is fused into each rank's C'/N stage-4 slab like nfft."""
 
-    def __init__(self, cgemm_fn=None):
+    def __init__(self, cgemm_fn=None, inverse_fn=None):
         self.cgemm_fn = cgemm_fn
 
-    def _body(self, x, Gr, Gi, *, plan, spec, n_model):
+    def _body(self, x, Gr, Gi, *ep_args, plan, spec, n_model):
         """x: (B_loc, C_loc, H, W); Gr/Gi: the local (P, C_loc, C') slab."""
         b_loc, c_loc = x.shape[0], x.shape[1]
         co_full = spec.Cout
@@ -305,19 +427,23 @@ class WfftPipeline:
         Zi = jax.lax.psum(Zi, plan.model_axis)
         Zr, Zi = Zr.astype(jnp.float32), Zi.astype(jnp.float32)
 
-        # Each rank inverts its C'/N slice (avoids duplicate stage-4 work).
+        # Each rank inverts its C'/N slice (avoids duplicate stage-4 work)
+        # and applies the fused epilogue on that slab only.
         co_loc = co_full // n_model
         idx = jax.lax.axis_index(plan.model_axis)
         Zr = jax.lax.dynamic_slice_in_dim(Zr, idx * co_loc, co_loc, axis=2)
         Zi = jax.lax.dynamic_slice_in_dim(Zi, idx * co_loc, co_loc, axis=2)
+        bias, residual = _unpack_epilogue_args(plan, ep_args)
         sp4 = _local_spec(spec, b_loc, c_loc, co_loc)
-        return stage_output_inverse(Zr, Zi, sp4)
+        return stage_output_inverse(Zr, Zi, sp4, epilogue=plan.epilogue,
+                                    bias=bias, residual=residual)
 
-    def _body_full(self, x, k, *, plan, spec, n_model):
+    def _body_full(self, x, k, *ep_args, plan, spec, n_model):
         """k: (C'_full, C_loc, kh, kw) — stage 2 inline on the local slab."""
         sp2 = _local_spec(spec, x.shape[0], k.shape[1], k.shape[0])
         Gr, Gi = stage_kernel_transform(k, sp2)       # (P, C_loc, C'_full)
-        return self._body(x, Gr, Gi, plan=plan, spec=spec, n_model=n_model)
+        return self._body(x, Gr, Gi, *ep_args, plan=plan, spec=spec,
+                          n_model=n_model)
 
     def prepare(self, plan, k):
         spec = padded_sharded_spec(plan)
@@ -336,27 +462,30 @@ class WfftPipeline:
                       out_specs=out_spec)(xp, *args)
         return y[:plan.spec.B, :plan.spec.Cout].astype(x.dtype)
 
-    def execute(self, plan, x, G):
+    def execute(self, plan, x, G, bias=None, residual=None):
         spec = padded_sharded_spec(plan)
         n_model = plan.mesh.shape[plan.model_axis]
+        ep_args, ep_specs = _epilogue_operands(plan, bias, residual)
         body = functools.partial(self._body, plan=plan, spec=spec,
                                  n_model=n_model)
         g_spec = P(None, plan.model_axis, None)        # G: C sharded
-        return self._run(plan, x, G, body, (g_spec, g_spec))
+        return self._run(plan, x, (*G, *ep_args), body,
+                         (g_spec, g_spec, *ep_specs))
 
-    def full(self, plan, x, k):
+    def full(self, plan, x, k, bias=None, residual=None):
         spec = padded_sharded_spec(plan)
         n_model = plan.mesh.shape[plan.model_axis]
         kp = _pad_axis(_pad_axis(k, 0, n_model), 1, n_model)
+        ep_args, ep_specs = _epilogue_operands(plan, bias, residual)
         body = functools.partial(self._body_full, plan=plan, spec=spec,
                                  n_model=n_model)
         k_spec = P(None, plan.model_axis, None, None)  # k: C sharded
-        return self._run(plan, x, (kp,), body, (k_spec,))
+        return self._run(plan, x, (kp, *ep_args), body, (k_spec, *ep_specs))
 
 
 PIPELINES = {"local": LocalPipeline, "nfft": NfftPipeline,
              "wfft": WfftPipeline}
 
 
-def pipeline_for(schedule: str, cgemm_fn=None):
-    return PIPELINES[schedule](cgemm_fn)
+def pipeline_for(schedule: str, cgemm_fn=None, inverse_fn=None):
+    return PIPELINES[schedule](cgemm_fn, inverse_fn)

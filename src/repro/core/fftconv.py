@@ -99,17 +99,26 @@ def kernel_transform(k, spec: ConvSpec, *, dtype=jnp.float32):
 # Stage 4: inverse transform
 # --------------------------------------------------------------------------
 
-def output_inverse(Zr, Zi, spec: ConvSpec):
-    """Stage 4: Z (P, M, C') -> O (B, C', Ho, Wo)."""
+def z_to_tiles(Z, spec: ConvSpec):
+    """(P, M, C') frequency layout -> per-tile (B, C', X, Dl, d, dh)."""
     d, dh = spec.delta, spec.delta_h
-    def from_pmc(Z):
-        Z = Z.reshape(d, dh, spec.B, spec.X, spec.D, spec.Cout)
-        return Z.transpose(2, 5, 3, 4, 0, 1)           # (B, C', X, Dl, d, dh)
-    y = irfft2_tiles(from_pmc(Zr), from_pmc(Zi), d)    # (B, C', X, Dl, d, d)
+    Z = Z.reshape(d, dh, spec.B, spec.X, spec.D, spec.Cout)
+    return Z.transpose(2, 5, 3, 4, 0, 1)               # (B, C', X, Dl, d, dh)
+
+
+def assemble_output_tiles(y, spec: ConvSpec):
+    """Inverse-transformed tiles (B, C', X, Dl, d, d) -> O (B, C', Ho, Wo)
+    (overlap-save crop + spatial reassembly)."""
     y = y[..., :spec.t_h, :spec.t_w]
     y = y.transpose(0, 1, 2, 4, 3, 5).reshape(
         spec.B, spec.Cout, spec.X * spec.t_h, spec.D * spec.t_w)
     return y[:, :, :spec.Ho, :spec.Wo]
+
+
+def output_inverse(Zr, Zi, spec: ConvSpec):
+    """Stage 4: Z (P, M, C') -> O (B, C', Ho, Wo)."""
+    y = irfft2_tiles(z_to_tiles(Zr, spec), z_to_tiles(Zi, spec), spec.delta)
+    return assemble_output_tiles(y, spec)
 
 
 # --------------------------------------------------------------------------

@@ -24,12 +24,23 @@ def _pad_to(x, axis, mult):
     return jnp.pad(x, pads)
 
 
+# Candidate block edges: power-of-two steps up to the 128-wide MXU/lane
+# width.  Small dims round UP to the next edge (operands are zero-padded to
+# block multiples) instead of taking the raw dim — a C=3 layer (VGG
+# conv1.1) gets an 8-wide block, not a degenerate 3-wide one.
+_BLOCK_EDGES = (8, 16, 32, 64, 128)
+
+
+def _round_block(dim):
+    for edge in _BLOCK_EDGES:
+        if edge >= dim:
+            return edge
+    return _BLOCK_EDGES[-1]
+
+
 def _default_blocks(M, N, C):
-    # MXU-aligned when the problem allows; clamp for small operands.
-    bm = min(128, M)
-    bn = min(128, N)
-    bk = min(128, C)
-    return bm, bn, bk
+    # MXU-aligned when the problem allows; lane-friendly for small operands.
+    return _round_block(M), _round_block(N), _round_block(C)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "three_m",

@@ -1,5 +1,7 @@
-from repro.kernels.dft_tile.ops import tile_fft_pallas, tile_ifft_pallas
+from repro.kernels.dft_tile.ops import (
+    tile_fft_pallas, tile_ifft_pallas, tile_ifft_epilogue_pallas,
+)
 from repro.kernels.dft_tile.ref import tile_fft_ref, tile_ifft_ref
 
-__all__ = ["tile_fft_pallas", "tile_ifft_pallas", "tile_fft_ref",
-           "tile_ifft_ref"]
+__all__ = ["tile_fft_pallas", "tile_ifft_pallas",
+           "tile_ifft_epilogue_pallas", "tile_fft_ref", "tile_ifft_ref"]

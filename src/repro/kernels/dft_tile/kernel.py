@@ -10,6 +10,8 @@ the kernel buys over the unfused einsum path.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -35,10 +37,10 @@ def _fwd_kernel(x_ref, fr_ref, fi_ref, fhr_ref, fhi_ref, tr_ref, ti_ref):
     ti_ref[...] = ti.astype(ti_ref.dtype)
 
 
-def _inv_kernel(zr_ref, zi_ref, fvr_ref, fvi_ref, wr_ref, wi_ref, y_ref):
-    zr, zi = zr_ref[...], zi_ref[...]          # (bt, d, dh)
-    fvr, fvi = fvr_ref[...], fvi_ref[...]      # (d, d)
-    wr, wi = wr_ref[...], wi_ref[...]          # (d, dh)
+def _inverse_block(zr, zi, fvr, fvi, wr, wi):
+    """The shared inverse-DFT math: Z (bt, d, dh) -> y (bt, d, d) real.
+    ``_inv_kernel`` and ``_inv_epilogue_kernel`` differ only in the tail
+    they apply to this block's result."""
     yr = jnp.einsum("hu,nuv->nhv", fvr, zr,
                     preferred_element_type=jnp.float32) \
         - jnp.einsum("hu,nuv->nhv", fvi, zi,
@@ -47,10 +49,42 @@ def _inv_kernel(zr_ref, zi_ref, fvr_ref, fvi_ref, wr_ref, wi_ref, y_ref):
                     preferred_element_type=jnp.float32) \
         + jnp.einsum("hu,nuv->nhv", fvi, zr,
                      preferred_element_type=jnp.float32)
-    y = jnp.einsum("nhv,wv->nhw", yr, wr,
-                   preferred_element_type=jnp.float32) \
+    return jnp.einsum("nhv,wv->nhw", yr, wr,
+                      preferred_element_type=jnp.float32) \
         - jnp.einsum("nhv,wv->nhw", yi, wi,
                      preferred_element_type=jnp.float32)
+
+
+def _inv_kernel(zr_ref, zi_ref, fvr_ref, fvi_ref, wr_ref, wi_ref, y_ref):
+    y = _inverse_block(zr_ref[...], zi_ref[...], fvr_ref[...], fvi_ref[...],
+                       wr_ref[...], wi_ref[...])
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+# Epilogue activations implementable in the kernel tail (VPU-only ops; the
+# tanh-approximate gelu matches repro.conv.epilogue.ACTIVATIONS exactly).
+_TAIL_ACTIVATIONS = {
+    "none": lambda y: y,
+    "relu": lambda y: jnp.maximum(y, 0.0),
+    "gelu": lambda y: jax.nn.gelu(y, approximate=True),
+    "silu": jax.nn.silu,
+}
+
+
+def _inv_epilogue_kernel(zr_ref, zi_ref, fvr_ref, fvi_ref, wr_ref, wi_ref,
+                         b_ref, y_ref, *, activation):
+    """Inverse tile DFT with the conv epilogue fused into the tail.
+
+    The second matmul's result never round-trips to HBM before the
+    bias/activation pass — the whole epilogue happens on the VMEM-resident
+    block, which is the memory-traffic saving the fusion buys (the inverse
+    transform is bandwidth-bound, per Zlateski et al.).
+    ``b_ref`` holds one bias scalar per tile (the tile's output channel).
+    """
+    y = _inverse_block(zr_ref[...], zi_ref[...], fvr_ref[...], fvi_ref[...],
+                       wr_ref[...], wi_ref[...])
+    y = y + b_ref[...][:, :, None]             # (bt, 1) -> per-tile scalar
+    y = _TAIL_ACTIVATIONS[activation](y)
     y_ref[...] = y.astype(y_ref.dtype)
 
 
@@ -89,6 +123,34 @@ def tile_ifft_call(n: int, delta: int, dtype, *, bt: int,
         in_specs=[z_spec, z_spec, _mat_spec((delta, delta)),
                   _mat_spec((delta, delta)), _mat_spec((delta, dh)),
                   _mat_spec((delta, dh))],
+        out_specs=y_spec,
+        out_shape=jax.ShapeDtypeStruct((n, delta, delta), dtype),
+        interpret=interpret,
+    )
+
+
+def tile_ifft_epilogue_call(n: int, delta: int, dtype, *, bt: int,
+                            activation: str = "none",
+                            interpret: bool = False):
+    """Inverse tile DFT with a fused bias+activation tail.
+
+    Inputs: 2x (n, delta, dh) complex planes + (n, 1) per-tile bias;
+    output (n, delta, delta) real, already bias-shifted and activated.
+    """
+    assert n % bt == 0
+    if activation not in _TAIL_ACTIVATIONS:
+        raise ValueError(f"unsupported kernel-tail activation "
+                         f"{activation!r}: {tuple(_TAIL_ACTIVATIONS)}")
+    dh = delta // 2 + 1
+    z_spec = pl.BlockSpec((bt, delta, dh), lambda i: (i, 0, 0))
+    y_spec = pl.BlockSpec((bt, delta, delta), lambda i: (i, 0, 0))
+    b_spec = pl.BlockSpec((bt, 1), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_inv_epilogue_kernel, activation=activation),
+        grid=(n // bt,),
+        in_specs=[z_spec, z_spec, _mat_spec((delta, delta)),
+                  _mat_spec((delta, delta)), _mat_spec((delta, dh)),
+                  _mat_spec((delta, dh)), b_spec],
         out_specs=y_spec,
         out_shape=jax.ShapeDtypeStruct((n, delta, delta), dtype),
         interpret=interpret,

@@ -7,7 +7,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dft import dft_mats
-from repro.kernels.dft_tile.kernel import tile_fft_call, tile_ifft_call
+from repro.kernels.dft_tile.kernel import (
+    tile_fft_call, tile_ifft_call, tile_ifft_epilogue_call,
+)
 
 
 def _pad_tiles(x, bt):
@@ -47,3 +49,27 @@ def tile_ifft_pallas(Zr, Zi, *, delta: int = 16, bt: int = 256,
     call = tile_ifft_call(Zrp.shape[0], delta, Zr.dtype, bt=bt,
                           interpret=interpret)
     return call(Zrp, Zip, Fvr, Fvi, Wr, Wi)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "delta", "bt",
+                                             "interpret"))
+def tile_ifft_epilogue_pallas(Zr, Zi, bias, *, activation: str = "none",
+                              delta: int = 16, bt: int = 256,
+                              interpret: bool | None = None):
+    """Inverse DFT of tiles with the conv epilogue fused into the tail.
+
+    ``bias`` is one scalar per tile — the bias of the output channel the
+    tile belongs to — added (and the activation applied) while the block is
+    still VMEM-resident: 2x (n, delta, dh) + (n,) -> (n, delta, delta).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    n = Zr.shape[0]
+    bt = min(bt, max(n, 1))
+    Zrp, Zip = _pad_tiles(Zr, bt), _pad_tiles(Zi, bt)
+    bp = _pad_tiles(bias.reshape(n, 1).astype(Zr.dtype), bt)
+    *_, Fvr, Fvi, Wr, Wi = dft_mats(delta)
+    call = tile_ifft_epilogue_call(Zrp.shape[0], delta, Zr.dtype, bt=bt,
+                                   activation=activation,
+                                   interpret=interpret)
+    return call(Zrp, Zip, Fvr, Fvi, Wr, Wi, bp)[:n]

@@ -1,11 +1,17 @@
-"""Serving launcher: batched prefill + greedy decode.
+"""Serving launcher: batched prefill + greedy decode, plus the FFT-conv
+network serving path (whole-net planning + prepared kernels).
 
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-2.7b --smoke \
         --batch 4 --prompt-len 32 --gen 16
+
+    # the paper's VGG conv trunk through plan_network/prepare_all:
+    PYTHONPATH=src python -m repro.launch.serve --convnet vgg --smoke \
+        --batch 2 --gen 4
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -18,15 +24,90 @@ from repro.models import whisper as WH
 from repro.train import make_prefill_step, make_decode_step
 
 
+# Table-I VGG entries chain into a sequential trunk with a 2x2 max-pool
+# after each of these layers (the Table geometries already reflect it).
+_VGG_POOL_AFTER = frozenset(
+    {"Vconv1.2", "Vconv2.2", "Vconv3.2", "Vconv4.2", "Vconv5"})
+
+
+def serve_convnet(args):
+    """Serve the paper's VGG conv trunk through the network planner.
+
+    The whole net is planned once (``plan_network``), every kernel is
+    transformed once per weights version (``prepare_all``), and each
+    request batch runs through the prepared, epilogue-fused plans —
+    the serving lifecycle the ROADMAP north-star targets.  A weight
+    update is one invalidation sweep (new ``weights_version``).
+    """
+    from repro.configs.paper_convs import TABLE1, network_convs
+    from repro.conv import plan_network, prepared_cache_info
+
+    image = args.image if args.image else (64 if args.smoke else 224)
+    if image % 32:
+        raise SystemExit("--image must be a multiple of 32 (5 pool halvings)")
+    scale = [dataclasses.replace(l, H=l.H * image // 224,
+                                 W=l.W * image // 224)
+             for l in TABLE1 if l.name.startswith("V")]
+    layers = network_convs(scale, args.batch)
+    net = plan_network(layers, backend=args.conv_backend)
+    print(net.describe())
+
+    rng = np.random.default_rng(args.seed)
+    def init(shape, s=0.05):
+        return jnp.asarray(s * rng.standard_normal(shape), jnp.float32)
+    kernels = {n: init(net[n].k_shape) for n in net}
+    biases = {n: init((net[n].spec.Cout,)) for n in net}
+
+    def forward(prepared, x):
+        from repro.models.layers import maxpool2x2
+        for name in net.layer_names:
+            x = prepared[name](x, bias=biases[name])
+            if name in _VGG_POOL_AFTER:
+                x = maxpool2x2(x)
+        return x
+
+    t0 = time.time()
+    prepared = net.prepare_all(kernels, weights_version=0)
+    t_prepare = time.time() - t0
+    x = init((args.batch,) + net[net.layer_names[0]].x_shape[1:], 1.0)
+    t0 = time.time()
+    for _ in range(args.gen):
+        y = forward(prepared, x)
+    jax.block_until_ready(y)
+    t_serve = time.time() - t0
+
+    # weight update -> ONE invalidation sweep; transforms re-run once/layer
+    kernels2 = {n: k + 0.01 for n, k in kernels.items()}
+    prepared2 = net.prepare_all(kernels2, weights_version=1)
+    jax.block_until_ready(forward(prepared2, x))
+    info = prepared_cache_info()
+    print(f"convnet=vgg image={image} batch={args.batch} "
+          f"prepare={t_prepare*1e3:.0f}ms "
+          f"serve={t_serve*1e3:.0f}ms/{args.gen} batches "
+          f"(prepared cache: {info.hits} hits, {info.misses} misses, "
+          f"{info.invalidations} invalidations)")
+    print("output:", tuple(y.shape), float(jnp.mean(y)))
+    return y
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_NAMES, default="qwen3-14b")
+    ap.add_argument("--convnet", choices=["vgg"], default=None,
+                    help="serve the paper's conv trunk via plan_network "
+                         "instead of an LM arch")
+    ap.add_argument("--conv-backend", default="fft-xla")
+    ap.add_argument("--image", type=int, default=0,
+                    help="convnet input size (default 224, smoke 64)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.convnet:
+        return serve_convnet(args)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     key = jax.random.PRNGKey(args.seed)

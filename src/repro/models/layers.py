@@ -61,6 +61,37 @@ def conv2d_planned(x, k, *, padding=1, backend="auto", schedule="auto",
     return plan.prepare(k, weights_version=weights_version)(x)
 
 
+def maxpool2x2(x):
+    """2x2/stride-2 max pool over the spatial axes of NCHW ``x``."""
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+
+
+def conv_block(x, k, bias=None, *, activation="none", residual=None,
+               padding=1, backend="auto", schedule="auto", mesh=None,
+               compute_dtype=None, weights_version=None):
+    """Conv + bias + activation (+ residual) as ONE fused plan.
+
+    The elementwise tail is an ``Epilogue`` frozen into the plan and
+    executed inside the pipeline's stage 4 — on the local output slab,
+    before the f32 -> x.dtype cast, with zero extra collectives under the
+    sharded schedules — instead of separate XLA ops on the gathered
+    output.  Differentiable in ``x``, ``k`` AND ``bias``/``residual`` via
+    the plan-level VJP; ``weights_version`` routes through a prepared plan
+    exactly like ``conv2d_planned``.
+    """
+    from repro.conv import Epilogue, plan_conv
+    ep = Epilogue(bias=bias is not None, activation=activation,
+                  residual=residual is not None)
+    plan = plan_conv(tuple(x.shape), tuple(k.shape), padding=padding,
+                     backend=backend, schedule=schedule, mesh=mesh,
+                     compute_dtype=compute_dtype, epilogue=ep)
+    if weights_version is None:
+        return plan(x, k, bias=bias, residual=residual)
+    return plan.prepare(k, weights_version=weights_version)(
+        x, bias=bias, residual=residual)
+
+
 # --------------------------------------------------------------------------
 # norms
 # --------------------------------------------------------------------------

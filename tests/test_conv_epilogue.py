@@ -1,0 +1,266 @@
+"""Fused-epilogue acceptance: parity vs the unfused+elementwise oracle on
+every backend x schedule pair, ZERO extra collectives / stage ops (jaxpr +
+stage-count asserted on nfft and wfft), gradients for (x, k, bias) through
+a fused plan, prepared-plan epilogue amortization, and the thread-safe
+``stage_trace`` context manager."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compat import make_mesh
+from repro.conv import Epilogue, plan_conv, stage_trace
+from repro.conv.epilogue import ACTIVATIONS, apply_epilogue
+from repro.core import conv2d_direct
+
+
+def _rand(shape, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(shape),
+                       jnp.float32)
+
+
+def _mesh11():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+PAIRS = [("direct", "local", None), ("fft-xla", "local", None),
+         ("fft-pallas", "local", None),
+         ("fft-xla", "nfft", _mesh11), ("fft-xla", "wfft", _mesh11),
+         ("fft-pallas", "nfft", _mesh11), ("fft-pallas", "wfft", _mesh11)]
+
+EPILOGUES = [Epilogue(bias=True, activation="relu"),
+             Epilogue(bias=True, activation="silu", residual=True),
+             Epilogue(activation="gelu")]
+
+
+def _operands(plan, ep, seed):
+    bias = _rand((plan.spec.Cout,), seed) if ep.bias else None
+    residual = _rand(plan.out_shape, seed + 1) if ep.residual else None
+    return bias, residual
+
+
+@pytest.mark.parametrize("backend,schedule,mesh_fn", PAIRS)
+@pytest.mark.parametrize("ep", EPILOGUES, ids=lambda e: e.describe())
+def test_fused_matches_unfused_oracle(backend, schedule, mesh_fn, ep):
+    """fused plan == unfused plan + explicit bias/act/residual, and both
+    match the direct-conv oracle + the same elementwise tail."""
+    mesh = mesh_fn() if mesh_fn else None
+    x, k = _rand((2, 3, 18, 18), 1), _rand((4, 3, 3, 3), 2)
+    fused = plan_conv(x.shape, k.shape, padding=1, backend=backend,
+                      schedule=schedule, mesh=mesh, epilogue=ep)
+    unfused = plan_conv(x.shape, k.shape, padding=1, backend=backend,
+                        schedule=schedule, mesh=mesh)
+    assert fused is not unfused          # epilogue is part of the cache key
+    bias, residual = _operands(fused, ep, 3)
+    y = fused(x, k, bias=bias, residual=residual)
+    y0 = apply_epilogue(unfused(x, k), ep, bias=bias, residual=residual)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                               rtol=2e-5, atol=2e-5)
+    oracle = apply_epilogue(conv2d_direct(x, k, padding=1), ep,
+                            bias=bias, residual=residual)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(oracle),
+                               rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("schedule", ["nfft", "wfft"])
+def test_fusion_adds_zero_collectives_and_zero_stage_ops(schedule):
+    """THE acceptance criterion: the fused epilogue rides the existing
+    stage-4 op (same trace-time stage counts) and the traced program has
+    exactly the same collective equations as the unfused plan."""
+    mesh = _mesh11()
+    ep = Epilogue(bias=True, activation="relu", residual=True)
+    x, k = _rand((2, 4, 20, 20), 4), _rand((4, 4, 3, 3), 5)
+    fused = plan_conv(x.shape, k.shape, padding=1, schedule=schedule,
+                      mesh=mesh, epilogue=ep)
+    unfused = plan_conv(x.shape, k.shape, padding=1, schedule=schedule,
+                        mesh=mesh)
+    bias, residual = _operands(fused, ep, 6)
+
+    with stage_trace() as fused_counts:
+        jaxpr_fused = str(jax.make_jaxpr(
+            lambda a, b, c, d: fused(a, b, bias=c, residual=d))(
+                x, k, bias, residual))
+    with stage_trace() as unfused_counts:
+        jaxpr_unfused = str(jax.make_jaxpr(
+            lambda a, b: unfused(a, b))(x, k))
+
+    assert dict(fused_counts) == dict(unfused_counts)
+    for coll in ("all_to_all", "psum["):
+        assert jaxpr_fused.count(coll) == jaxpr_unfused.count(coll), coll
+    if schedule == "wfft":
+        assert jaxpr_fused.count("psum[") >= 2     # the hot-stage psum pair
+    else:
+        assert jaxpr_fused.count("all_to_all") == 6
+
+
+@pytest.mark.parametrize("backend,schedule,mesh_fn", [
+    ("direct", "local", None), ("fft-xla", "local", None),
+    ("fft-pallas", "local", None), ("fft-xla", "nfft", _mesh11),
+    ("fft-xla", "wfft", _mesh11)])
+def test_grad_x_k_bias_through_fused_plan(backend, schedule, mesh_fn):
+    """d(x, k, bias) through a fused bias+act plan vs the direct oracle
+    with the same explicit elementwise tail."""
+    mesh = mesh_fn() if mesh_fn else None
+    ep = Epilogue(bias=True, activation="relu")
+    x, k = _rand((2, 3, 14, 14), 7), _rand((4, 3, 3, 3), 8)
+    bias = _rand((4,), 9)
+    plan = plan_conv(x.shape, k.shape, padding=1, backend=backend,
+                     schedule=schedule, mesh=mesh, epilogue=ep)
+
+    def loss_fused(x, k, b):
+        return jnp.sum(jnp.sin(plan(x, k, bias=b)))
+
+    def loss_oracle(x, k, b):
+        y = jax.nn.relu(conv2d_direct(x, k, padding=1)
+                        + b[None, :, None, None])
+        return jnp.sum(jnp.sin(y))
+
+    g = jax.grad(loss_fused, argnums=(0, 1, 2))(x, k, bias)
+    g0 = jax.grad(loss_oracle, argnums=(0, 1, 2))(x, k, bias)
+    for a, b, name in zip(g, g0, ("dx", "dk", "dbias")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-3, err_msg=name)
+
+
+def test_grad_residual_through_fused_plan():
+    ep = Epilogue(bias=True, activation="silu", residual=True)
+    x, k = _rand((1, 2, 12, 12), 10), _rand((2, 2, 3, 3), 11)
+    bias, res = _rand((2,), 12), _rand((1, 2, 12, 12), 13)
+    plan = plan_conv(x.shape, k.shape, padding=1, backend="fft-xla",
+                     epilogue=ep)
+    g = jax.grad(lambda r: jnp.sum(jnp.sin(
+        plan(x, k, bias=bias, residual=r))))(res)
+    g0 = jax.grad(lambda r: jnp.sum(jnp.sin(jax.nn.silu(
+        conv2d_direct(x, k, padding=1) + bias[None, :, None, None]
+        + r))))(res)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g0),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("backend,schedule,mesh_fn", [
+    ("fft-xla", "local", None), ("fft-pallas", "local", None),
+    ("fft-xla", "nfft", _mesh11), ("fft-xla", "wfft", _mesh11)])
+def test_prepared_epilogue_parity_and_stage_counts(backend, schedule,
+                                                   mesh_fn):
+    """Prepared + fused epilogue: numerics match one-shot fused execution
+    AND the prepared stage counts are unchanged vs an unfused prepared
+    plan (the epilogue amortizes with the kernel transform, costing no
+    extra stage work per call)."""
+    mesh = mesh_fn() if mesh_fn else None
+    ep = Epilogue(bias=True, activation="relu")
+    x, k = _rand((2, 3, 16, 16), 14), _rand((4, 3, 3, 3), 15)
+    fused = plan_conv(x.shape, k.shape, padding=1, backend=backend,
+                      schedule=schedule, mesh=mesh, epilogue=ep)
+    unfused = plan_conv(x.shape, k.shape, padding=1, backend=backend,
+                        schedule=schedule, mesh=mesh)
+    bias = _rand((4,), 16)
+
+    pf, pu = fused.prepare(k), unfused.prepare(k)
+    np.testing.assert_allclose(np.asarray(pf(x, bias=bias)),
+                               np.asarray(fused(x, k, bias=bias)),
+                               rtol=2e-5, atol=2e-5)
+    with stage_trace() as cf:
+        jax.make_jaxpr(lambda a, b: pf(a, bias=b))(x, bias)
+    with stage_trace() as cu:
+        jax.make_jaxpr(pu)(x)
+    assert dict(cf) == dict(cu)
+
+
+def test_epilogue_operand_validation():
+    ep = Epilogue(bias=True, activation="relu")
+    x, k = _rand((1, 2, 12, 12), 17), _rand((2, 2, 3, 3), 18)
+    plan = plan_conv(x.shape, k.shape, padding=1, backend="fft-xla",
+                     epilogue=ep)
+    with pytest.raises(ValueError, match="declares bias=True"):
+        plan(x, k)
+    with pytest.raises(ValueError, match="bias must have shape"):
+        plan(x, k, bias=_rand((3,), 19))
+    plain = plan_conv(x.shape, k.shape, padding=1, backend="fft-xla")
+    with pytest.raises(ValueError, match="declares bias=False"):
+        plain(x, k, bias=_rand((2,), 20))
+    with pytest.raises(ValueError, match="unknown epilogue activation"):
+        Epilogue(activation="tanh")
+
+
+def test_epilogue_fuses_before_output_cast():
+    """The epilogue runs in f32 BEFORE the x.dtype cast: a bf16 input
+    still gets an f32-accurate elementwise tail."""
+    ep = Epilogue(bias=True, activation="gelu")
+    x = _rand((1, 2, 12, 12), 21).astype(jnp.bfloat16)
+    k, bias = _rand((2, 2, 3, 3), 22), _rand((2,), 23)
+    plan = plan_conv(x.shape, k.shape, padding=1, backend="fft-xla",
+                     epilogue=ep)
+    y = plan(x, k, bias=bias)
+    assert y.dtype == jnp.bfloat16
+    y0 = ACTIVATIONS["gelu"](
+        conv2d_direct(x.astype(jnp.float32), k, padding=1)
+        + bias[None, :, None, None]).astype(jnp.bfloat16)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y0, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+# --------------------------------------------------------------------------
+# stage_trace: thread-safe, context-managed counters (satellite)
+# --------------------------------------------------------------------------
+
+def _run_stage_op(seed):
+    """One eager stage-op invocation (increments the counters exactly once
+    per call — unlike re-tracing a plan, which jax memoizes per
+    (plan, avals) so repeat traces never re-enter Python)."""
+    from repro.conv import stages
+    from repro.core.conv_spec import ConvSpec
+    spec = ConvSpec(B=1, C=1, Cout=1, H=8, W=8, kh=3, kw=3,
+                    pad_h=1, pad_w=1, delta=16)
+    stages.stage_input_transform(_rand((1, 1, 8, 8), seed), spec)
+
+
+def test_stage_trace_nested_and_shim_compat():
+    from repro.conv import reset_stage_counts, stage_counts
+    reset_stage_counts()
+    with stage_trace() as outer:
+        _run_stage_op(24)
+        with stage_trace() as inner:
+            _run_stage_op(25)
+    assert inner["input_transform"] == 1
+    assert outer["input_transform"] == 2       # outer sees nested trace too
+    assert stage_counts()["input_transform"] == 2   # global shim counts too
+    reset_stage_counts()
+
+
+def test_stage_trace_empty_nested_traces_unwind_cleanly():
+    """Regression: teardown must remove the counter by IDENTITY — two
+    still-empty nested Counters compare equal, and equality-based removal
+    popped the wrong one (miscounts, then ValueError on outer exit)."""
+    with stage_trace() as outer:
+        with stage_trace():
+            pass
+        _run_stage_op(28)                       # credited to outer only
+    assert outer["input_transform"] == 1
+
+
+def test_stage_trace_is_thread_isolated():
+    """Concurrent tracers each observe only their own thread's stage ops
+    (the module-global Counter behind the shim would bleed)."""
+    results, errors = {}, []
+
+    def worker(name, n):
+        try:
+            with stage_trace() as c:
+                for i in range(n):
+                    _run_stage_op(100 + n + i)
+            results[name] = dict(c)
+        except Exception as e:                  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=("a", 2)),
+               threading.Thread(target=worker, args=("b", 3))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert results["a"]["input_transform"] == 2
+    assert results["b"]["input_transform"] == 3

@@ -80,3 +80,44 @@ def test_tile_fft_vs_numpy():
                                atol=1e-4)
     np.testing.assert_allclose(np.asarray(Ti), ref.imag, rtol=1e-4,
                                atol=1e-4)
+
+
+def test_default_blocks_round_to_lane_friendly():
+    """Small dims round UP to a power-of-two edge in {8..128} (operands are
+    zero-padded to block multiples), never a degenerate raw-dim block."""
+    from repro.kernels.cgemm.ops import _default_blocks
+    assert _default_blocks(3, 5, 130) == (8, 8, 128)     # C=3 conv1.1 case
+    assert _default_blocks(16, 64, 128) == (16, 64, 128)
+    assert _default_blocks(200, 9, 33) == (128, 16, 64)
+    assert all(b in (8, 16, 32, 64, 128)
+               for b in _default_blocks(1, 7, 1000))
+
+
+def test_cgemm_tiny_dims_use_rounded_blocks():
+    """C=3-style degenerate dims still produce correct numerics through the
+    rounded default blocks."""
+    Dr, Di = _r((2, 12, 3), 21), _r((2, 12, 3), 22)
+    Gr, Gi = _r((2, 3, 5), 23), _r((2, 3, 5), 24)
+    Zr0, Zi0 = cgemm_ref(Dr, Di, Gr, Gi)
+    Zr, Zi = cgemm_pallas(Dr, Di, Gr, Gi)
+    np.testing.assert_allclose(np.asarray(Zr), np.asarray(Zr0), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(Zi), np.asarray(Zi0), atol=2e-5)
+
+
+@pytest.mark.parametrize("activation", ["none", "relu", "gelu", "silu"])
+def test_tile_ifft_epilogue_matches_composed(activation):
+    """The fused inverse+epilogue kernel == unfused inverse, then bias+act
+    (elementwise-before-crop equals crop-then-elementwise on kept elems)."""
+    import jax
+    from repro.kernels.dft_tile import tile_ifft_epilogue_pallas
+    n, delta = 6, 16
+    x = _r((n, delta, delta), 31)
+    Tr, Ti = tile_fft_ref(x, delta)
+    bias = _r((n,), 32)
+    y = tile_ifft_epilogue_pallas(Tr, Ti, bias, activation=activation,
+                                  delta=delta)
+    from repro.conv.epilogue import ACTIVATIONS
+    y0 = ACTIVATIONS[activation](
+        tile_ifft_pallas(Tr, Ti, delta=delta) + bias[:, None, None])
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                               rtol=1e-4, atol=1e-4)

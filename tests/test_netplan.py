@@ -1,0 +1,147 @@
+"""Network-level planning: one resolution pass against the shared plan
+cache, ``prepare_all`` running each layer's kernel transform exactly once
+per weights_version, and the aggregate stage/collective report."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.conv import (
+    Epilogue, NetworkConv, clear_plan_cache, clear_prepared_cache,
+    plan_cache_info, plan_network, prepared_cache_info, stage_trace,
+)
+from repro.core import conv2d_direct
+
+
+def _rand(shape, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(shape),
+                       jnp.float32)
+
+
+EP = Epilogue(bias=True, activation="relu")
+
+
+def _layers(batch=2):
+    return [
+        NetworkConv("c1", (batch, 3, 16, 16), (8, 3, 3, 3), padding=1,
+                    epilogue=EP),
+        NetworkConv("c2", (batch, 8, 16, 16), (8, 8, 3, 3), padding=1,
+                    epilogue=EP),
+        NetworkConv("c3", (batch, 8, 16, 16), (8, 8, 3, 3), padding=1,
+                    epilogue=EP),
+    ]
+
+
+def test_plan_network_resolves_through_shared_cache():
+    clear_plan_cache()
+    net = plan_network(_layers(), backend="fft-xla")
+    assert net.layer_names == ("c1", "c2", "c3")
+    # same-geometry layers share ONE frozen plan (cache dedupe)
+    assert net["c2"] is net["c3"]
+    assert net["c1"] is not net["c2"]
+    misses_after_first = plan_cache_info().misses
+    # re-planning the network is pure cache hits
+    net2 = plan_network(_layers(), backend="fft-xla")
+    assert all(net2[n] is net[n] for n in net)
+    assert plan_cache_info().misses == misses_after_first
+
+
+def test_prepare_all_transforms_once_per_layer_per_version():
+    """Acceptance: a multi-layer eval runs the kernel transform exactly
+    once per layer per weights_version."""
+    clear_prepared_cache()
+    net = plan_network(_layers(), backend="fft-xla")
+    params = {n: _rand(net[n].k_shape, i) for i, n in enumerate(net)}
+    biases = {n: _rand((net[n].spec.Cout,), 10 + i)
+              for i, n in enumerate(net)}
+    x = _rand((2, 3, 16, 16), 20)
+
+    with stage_trace() as c:
+        prepared = net.prepare_all(params, weights_version=1)
+    assert c["kernel_transform"] == len(net)        # once per layer...
+
+    def fwd(prepared, x):
+        h = x
+        for n in net.layer_names:
+            h = prepared[n](h, bias=biases[n])
+        return h
+
+    with stage_trace() as c:
+        y = fwd(prepared, x)
+        fwd(prepared, x)                            # ...and never at eval
+        net.prepare_all(params, weights_version=1)  # same version: hits
+    assert c.get("kernel_transform", 0) == 0
+    assert prepared_cache_info().hits >= len(net)
+
+    # numerics: chained prepared+fused layers vs the direct oracle chain
+    h0 = x
+    for n in net.layer_names:
+        h0 = jnp.maximum(conv2d_direct(h0, params[n], padding=1)
+                         + biases[n][None, :, None, None], 0.0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(h0),
+                               rtol=3e-4, atol=3e-4)
+
+    # weight update -> ONE sweep re-transforming every layer
+    params2 = {n: k + 0.1 for n, k in params.items()}
+    with stage_trace() as c:
+        prepared2 = net.prepare_all(params2, weights_version=2)
+    assert c["kernel_transform"] == len(net)
+    y2 = fwd(prepared2, x)
+    assert not np.allclose(np.asarray(y), np.asarray(y2))
+    clear_prepared_cache()
+
+
+def test_report_aggregates_stages_and_collectives():
+    net = plan_network(_layers(), backend="fft-xla")
+    rep = net.report()
+    assert rep["n_layers"] == 3
+    assert rep["n_distinct_plans"] == 2
+    assert rep["total_stage_counts"]["cgemm"] == 3
+    assert rep["total_stage_counts"]["kernel_transform"] == 3
+    assert rep["total_collectives"]["all_to_all"] == 0   # local schedule
+    assert rep["total_flops"] == sum(p.flops()
+                                     for p in net.plans.values())
+    assert "c1" in net.describe()
+
+
+def test_report_counts_sharded_collectives():
+    from repro.compat import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
+    layers = [NetworkConv("s1", (2, 4, 16, 16), (4, 4, 3, 3), padding=1,
+                          epilogue=EP)]
+    net = plan_network(layers, backend="fft-xla", schedule="nfft",
+                       mesh=mesh)
+    rep = net.report()
+    # 3 boundary a2a x re/im = 6 all_to_all eqns for one nfft layer
+    assert rep["total_collectives"]["all_to_all"] == 6
+    netw = plan_network(layers, backend="fft-xla", schedule="wfft",
+                        mesh=mesh)
+    repw = netw.report()
+    assert repw["total_collectives"]["psum"] >= 2    # hot-stage re/im pair
+    assert repw["total_collectives"]["all_to_all"] == 0
+
+
+def test_per_layer_overrides_and_errors():
+    layers = _layers()
+    tiny = NetworkConv("c0", (2, 3, 16, 16), (8, 3, 3, 3), padding=1,
+                       epilogue=EP, overrides=(("backend", "direct"),))
+    net = plan_network([tiny] + layers, backend="fft-xla")
+    assert net["c0"].backend == "direct"
+    assert net["c1"].backend == "fft-xla"
+
+    with pytest.raises(ValueError, match="duplicate layer names"):
+        plan_network(layers + [layers[0]])
+    net2 = plan_network(layers, backend="fft-xla")
+    with pytest.raises(ValueError, match="missing kernels"):
+        net2.prepare_all({"c1": _rand((8, 3, 3, 3))}, weights_version=0)
+
+
+def test_vgg_network_config():
+    """The Table-I VGG trunk resolves as one network with fused epilogues."""
+    from repro.configs.paper_convs import vgg_network
+    layers = vgg_network(2)
+    assert [l.name for l in layers][:2] == ["Vconv1.1", "Vconv1.2"]
+    assert all(l.epilogue == Epilogue(bias=True, activation="relu")
+               for l in layers)
+    net = plan_network(layers, backend="fft-xla")
+    assert len(net) == 9
+    assert net["Vconv1.1"].x_shape == (2, 3, 224, 224)
