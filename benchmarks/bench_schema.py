@@ -1,0 +1,59 @@
+"""Schema helpers for ``BENCH_conv.json`` / ``BENCH_baseline.json``.
+
+Two entry forms are accepted, so tuned runs can record the chosen config
+alongside the timing without breaking plain-float consumers:
+
+    {"table1/Vconv1.2": 123.4,                          # legacy: bare float
+     "autotune/conv3": {"us_per_call": 88.1,            # rich: dict
+                        "config": {"backend": "fft-xla", ...}}}
+
+``normalize`` maps both onto ``{name: {"us_per_call": float,
+"config": dict}}``; every consumer (CI smoke assertion, the perf-regression
+gate, ``update_baseline``) goes through it.
+"""
+from __future__ import annotations
+
+import json
+
+
+def normalize_entry(name: str, value):
+    """One entry -> ``{"us_per_call": float, "config": dict}`` (raises
+    ``ValueError`` on anything else)."""
+    if isinstance(value, bool):
+        raise ValueError(f"bench entry {name!r}: bool is not a timing")
+    if isinstance(value, (int, float)):
+        return {"us_per_call": float(value), "config": {}}
+    if isinstance(value, dict):
+        if "us_per_call" not in value:
+            raise ValueError(
+                f"bench entry {name!r}: dict form requires 'us_per_call', "
+                f"got keys {sorted(value)}")
+        us = value["us_per_call"]
+        if isinstance(us, bool) or not isinstance(us, (int, float)):
+            raise ValueError(
+                f"bench entry {name!r}: us_per_call must be a number, "
+                f"got {us!r}")
+        config = value.get("config", {})
+        if not isinstance(config, dict):
+            raise ValueError(
+                f"bench entry {name!r}: config must be a dict, "
+                f"got {type(config).__name__}")
+        return {"us_per_call": float(us), "config": config}
+    raise ValueError(
+        f"bench entry {name!r}: expected float or "
+        f"{{'us_per_call': float, 'config': {{...}}}}, "
+        f"got {type(value).__name__}")
+
+
+def normalize(data: dict) -> dict:
+    """Whole-file normalization; raises ``ValueError`` on malformed input."""
+    if not isinstance(data, dict):
+        raise ValueError(f"bench JSON must be an object, "
+                         f"got {type(data).__name__}")
+    return {str(name): normalize_entry(name, value)
+            for name, value in data.items()}
+
+
+def load_normalized(path: str) -> dict:
+    with open(path) as fh:
+        return normalize(json.load(fh))

@@ -1,0 +1,107 @@
+"""CI perf-regression gate: BENCH_conv.json vs the committed baseline.
+
+    python -m benchmarks.compare_baseline --current BENCH_conv.json \
+        [--baseline benchmarks/BENCH_baseline.json] [--tolerance 2.5]
+
+Prints a per-entry delta table and exits non-zero when any shared entry is
+slower than ``tolerance`` x its baseline (2.5x by default — wide enough
+for shared-runner noise, tight enough to catch a real 10x cliff).  Entries
+below ``--min-us`` in the baseline are skipped (pure-jitter territory);
+entries that exist on only one side are reported but don't fail unless
+``--strict-missing`` (bench sets legitimately grow and shrink — baseline
+refresh is ``python -m benchmarks.update_baseline``).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks.bench_schema import load_normalized
+
+
+def compare(baseline: dict, current: dict, *, tolerance: float,
+            min_us: float = 0.0):
+    """Returns (rows, regressions, missing, new); rows are
+    (name, base_us, cur_us, ratio, status) sorted worst-first."""
+    rows, regressions = [], []
+    missing = sorted(set(baseline) - set(current))
+    new = sorted(set(current) - set(baseline))
+    for name in sorted(set(baseline) & set(current)):
+        base = baseline[name]["us_per_call"]
+        cur = current[name]["us_per_call"]
+        if base < min_us:
+            rows.append((name, base, cur, None, "skipped (<min-us)"))
+            continue
+        ratio = cur / base if base > 0 else float("inf")
+        status = "ok"
+        if ratio > tolerance:
+            status = f"REGRESSED (> {tolerance:g}x)"
+            regressions.append(name)
+        rows.append((name, base, cur, ratio, status))
+    rows.sort(key=lambda r: -(r[3] if r[3] is not None else -1.0))
+    return rows, regressions, missing, new
+
+
+def format_table(rows, missing, new) -> str:
+    width = max([len(r[0]) for r in rows] + [len(n) for n in missing + new]
+                + [4])
+    lines = [f"{'name':<{width}}  {'baseline':>12}  {'current':>12}  "
+             f"{'ratio':>7}  status"]
+    for name, base, cur, ratio, status in rows:
+        r = f"{ratio:7.2f}" if ratio is not None else "      -"
+        lines.append(f"{name:<{width}}  {base:>10.1f}us  {cur:>10.1f}us  "
+                     f"{r}  {status}")
+    for name in missing:
+        lines.append(f"{name:<{width}}  {'(baseline)':>12}  "
+                     f"{'MISSING':>12}  {'':>7}  not in current run")
+    for name in new:
+        lines.append(f"{name:<{width}}  {'NEW':>12}  {'':>12}  {'':>7}  "
+                     "not in baseline (update_baseline to adopt)")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="benchmarks/BENCH_baseline.json")
+    ap.add_argument("--current", default="BENCH_conv.json")
+    ap.add_argument("--tolerance", type=float, default=2.5,
+                    help="fail when current > tolerance x baseline "
+                         "(default 2.5)")
+    ap.add_argument("--min-us", type=float, default=0.0,
+                    help="skip entries whose baseline is below this "
+                         "(jitter floor)")
+    ap.add_argument("--strict-missing", action="store_true",
+                    help="also fail when a baseline entry vanished from "
+                         "the current run")
+    args = ap.parse_args(argv)
+
+    try:
+        baseline = load_normalized(args.baseline)
+        current = load_normalized(args.current)
+    except (OSError, ValueError) as e:
+        print(f"perf gate: cannot load inputs: {e}", file=sys.stderr)
+        return 2
+    if not current:
+        print("perf gate: current run produced no entries", file=sys.stderr)
+        return 2
+
+    rows, regressions, missing, new = compare(
+        baseline, current, tolerance=args.tolerance, min_us=args.min_us)
+    print(format_table(rows, missing, new))
+    if regressions:
+        print(f"\nperf gate FAILED: {len(regressions)} entr"
+              f"{'y' if len(regressions) == 1 else 'ies'} regressed "
+              f"beyond {args.tolerance:g}x: {', '.join(regressions)}",
+              file=sys.stderr)
+        return 1
+    if missing and args.strict_missing:
+        print(f"\nperf gate FAILED (--strict-missing): baseline entries "
+              f"vanished: {', '.join(missing)}", file=sys.stderr)
+        return 1
+    print(f"\nperf gate OK: {len(rows)} compared, {len(new)} new, "
+          f"{len(missing)} missing, tolerance {args.tolerance:g}x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

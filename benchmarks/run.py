@@ -1,12 +1,19 @@
 """Benchmark harness: one entry per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--json-out PATH]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--tuned] \
+        [--json-out PATH]
 
 Prints ``name,us_per_call,derived`` CSV rows (plus context columns) and
-writes the same numbers as machine-readable JSON (``BENCH_conv.json``:
-name -> us_per_call) so the perf trajectory accumulates across runs.
-Full-scale (arch x shape x mesh) numbers come from the dry-run
-(`repro.launch.dryrun --all`) and are summarised in EXPERIMENTS.md.
+writes the same numbers as machine-readable JSON (``BENCH_conv.json``) so
+the perf trajectory accumulates across runs.  Entries are either a bare
+``us_per_call`` float or — for ``--tuned`` autotuner rows — a
+``{"us_per_call": float, "config": {...}}`` dict recording the measured
+winner alongside its timing (see ``benchmarks.bench_schema`` for the
+tolerant schema every consumer shares).  The CI perf gate
+(``benchmarks.compare_baseline``) diffs this file against the committed
+``benchmarks/BENCH_baseline.json``.  Full-scale (arch x shape x mesh)
+numbers come from the dry-run (`repro.launch.dryrun --all`) and are
+summarised in EXPERIMENTS.md.
 """
 from __future__ import annotations
 
@@ -53,6 +60,9 @@ def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fewer layers / reps (CI-sized)")
+    ap.add_argument("--tuned", action="store_true",
+                    help="add measured-autotuner rows (winner config "
+                         "recorded alongside the timing)")
     ap.add_argument("--json-out", default="BENCH_conv.json",
                     help="machine-readable name->us_per_call output "
                          "('' disables)")
@@ -77,11 +87,46 @@ def main(argv=None) -> dict:
         sys.stdout = tee.wrapped
 
     rows = parse_csv_rows(tee.captured.getvalue())
+    if args.tuned:
+        rows.update(_tuned_rows(quick=args.quick))
     if args.json_out:
         with open(args.json_out, "w") as fh:
             json.dump(rows, fh, indent=1, sort_keys=True)
         print(f"# wrote {len(rows)} entries to {args.json_out}")
     return rows
+
+
+def _tuned_rows(quick: bool = True) -> dict:
+    """Measured-autotuner entries: the winner's timing plus the chosen
+    (backend, schedule, block) config, in the dict entry form."""
+    from repro.conv import autotune
+
+    shapes = [("autotune/c8o16s32", (1, 8, 32, 32), (16, 8, 3, 3), 1)]
+    if not quick:
+        shapes.append(
+            ("autotune/c16o32s64", (1, 16, 64, 64), (32, 16, 3, 3), 1))
+    out = {}
+    for name, x_shape, k_shape, padding in shapes:
+        w = autotune.tune(x_shape, k_shape, padding=padding)
+        us = w.us_per_call
+        config = {"backend": w.backend, "schedule": w.schedule,
+                  "bm": w.bm, "bn": w.bn, "bk": w.bk, "dft_bt": w.dft_bt,
+                  "source": w.source}
+        if us is None:
+            # cost-model fallback (measurement disabled): time the pick so
+            # the row still carries a number
+            import jax.numpy as jnp
+            import numpy as np
+            from repro.conv import plan_conv
+            plan = plan_conv(x_shape, k_shape, padding=padding,
+                             backend=w.backend, schedule=w.schedule)
+            rng = np.random.default_rng(0)
+            x = jnp.asarray(rng.standard_normal(x_shape), jnp.float32)
+            k = jnp.asarray(rng.standard_normal(k_shape), jnp.float32)
+            us = autotune.measure_us(plan, x, k)
+        print(f"{name},{us:.1f},{config['backend']}/{config['schedule']}")
+        out[name] = {"us_per_call": float(us), "config": config}
+    return out
 
 
 def _conv_roofline_rows():

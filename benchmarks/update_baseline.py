@@ -1,0 +1,56 @@
+"""Refresh the committed perf baseline (``benchmarks/BENCH_baseline.json``).
+
+    # re-measure on this machine (the CI-sized quick run) and write:
+    python -m benchmarks.update_baseline
+
+    # or adopt an existing BENCH_conv.json (e.g. downloaded from a CI run
+    # on the runner hardware the gate compares against):
+    python -m benchmarks.update_baseline --from BENCH_conv.json
+
+The output is normalized to the ``{name: {"us_per_call": float,
+"config": {...}}}`` schema (see ``benchmarks.bench_schema``) so the gate
+never has to guess entry shapes.  Commit the result; the CI perf gate
+(``benchmarks.compare_baseline``) compares every smoke run against it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.bench_schema import normalize
+
+_DEFAULT_OUT = os.path.join(os.path.dirname(__file__),
+                            "BENCH_baseline.json")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--from", dest="src", default=None,
+                    help="adopt an existing bench JSON instead of "
+                         "re-measuring")
+    ap.add_argument("--out", default=_DEFAULT_OUT)
+    ap.add_argument("--full", action="store_true",
+                    help="measure with the full (non --quick) bench run")
+    args = ap.parse_args(argv)
+
+    if args.src:
+        with open(args.src) as fh:
+            data = normalize(json.load(fh))
+    else:
+        from benchmarks import run as bench_run
+        rows = bench_run.main(([] if args.full else ["--quick"])
+                              + ["--json-out", ""])
+        data = normalize(rows)
+
+    if not data:
+        raise SystemExit("refusing to write an empty baseline")
+    with open(args.out, "w") as fh:
+        json.dump(data, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    print(f"wrote {len(data)} baseline entries to {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -23,6 +23,8 @@ from repro.conv.netplan import (
     NetworkConv, NetworkPlan, PreparedNetwork, plan_network,
 )
 from repro.conv import backends as _backends
+from repro.conv import autotune
+from repro.conv.autotune import TunedConfig, autotune_info
 
 _backends.register_builtin()
 
@@ -32,6 +34,7 @@ __all__ = [
     "plan_cache_info", "clear_plan_cache", "plan_cache_capacity",
     "prepared_cache_info", "clear_prepared_cache",
     "stage_counts", "reset_stage_counts", "stage_trace",
+    "autotune", "TunedConfig", "autotune_info",
     "BackendInfo", "ScheduleInfo",
     "register_backend", "register_schedule",
     "get_backend", "get_schedule",

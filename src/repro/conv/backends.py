@@ -45,13 +45,14 @@ def _pallas_cgemm_fn(plan):
                              bm=plan.bm, bn=plan.bn, bk=plan.bk)
 
 
-def _pallas_fused_inverse(Zr, Zi, spec, epilogue, bias):
+def _pallas_fused_inverse(Zr, Zi, spec, epilogue, bias, *, bt=None):
     """Stage 4 through the fused dft_tile kernel: inverse DFT + bias +
     activation in one VMEM-resident tail.
 
     The activation runs on whole tiles before the overlap-save crop; the
     crop only *selects* elements, so elementwise-before-crop equals
-    crop-then-elementwise on everything kept.
+    crop-then-elementwise on everything kept.  ``bt`` is the plan's
+    ``dft_bt`` tile-batch block override (autotuned or user-pinned).
     """
     from repro.kernels.dft_tile import tile_ifft_epilogue_pallas
     Zrt = F.z_to_tiles(Zr, spec)            # (B, C', X, Dl, d, dh)
@@ -66,7 +67,7 @@ def _pallas_fused_inverse(Zr, Zi, spec, epilogue, bias):
     y = tile_ifft_epilogue_pallas(Zrt.reshape(n, d, dh),
                                   Zit.reshape(n, d, dh), b_tile,
                                   activation=epilogue.activation,
-                                  delta=d)
+                                  delta=d, bt=bt)
     return F.assemble_output_tiles(y.reshape(B, Co, X, Dl, d, d), spec)
 
 
@@ -83,7 +84,8 @@ def _fft_xla_pipeline(plan):
 
 
 def _fft_pallas_pipeline(plan):
-    inverse_fn = _pallas_fused_inverse if plan.schedule == "local" else None
+    inverse_fn = functools.partial(_pallas_fused_inverse, bt=plan.dft_bt) \
+        if plan.schedule == "local" else None
     return stages.pipeline_for(plan.schedule,
                                cgemm_fn=_pallas_cgemm_fn(plan),
                                inverse_fn=inverse_fn)

@@ -137,6 +137,44 @@ class NetworkPlan:
                                weights_version=weights_version)
 
     # ---- introspection ----------------------------------------------------
+    def tuning_report(self) -> dict:
+        """Per-layer autotune winners after a ``backend="tuned"`` planning
+        sweep: the resolved (backend, schedule, blocks) of every layer,
+        plus the measured timing/provenance when the tuning cache has an
+        entry for the layer's geometry (``us_per_call`` is ``None`` for
+        layers resolved by the cost model or planned with a non-tuned
+        backend)."""
+        from repro.conv import autotune
+        out = {}
+        for name, plan in self.plans.items():
+            cfg = None
+            for sched_req in (plan.schedule, "auto"):
+                c = autotune.lookup(
+                    plan.x_shape, plan.k_shape, padding=plan.padding,
+                    delta=plan.spec.delta, schedule=sched_req,
+                    mesh=plan.mesh, three_m=plan.three_m,
+                    compute_dtype=plan.compute_dtype,
+                    data_axis=plan.data_axis, model_axis=plan.model_axis,
+                    replicate_kernel_transform=
+                    plan.replicate_kernel_transform)
+                # only attribute a timing that describes THIS plan's
+                # resolved config — the cache may hold a different
+                # request's winner for the same geometry
+                if c is not None and (
+                        c.backend, c.schedule, c.bm, c.bn, c.bk, c.dft_bt
+                ) == (plan.backend, plan.schedule, plan.bm, plan.bn,
+                      plan.bk, plan.dft_bt):
+                    cfg = c
+                    break
+            out[name] = {
+                "backend": plan.backend, "schedule": plan.schedule,
+                "bm": plan.bm, "bn": plan.bn, "bk": plan.bk,
+                "dft_bt": plan.dft_bt,
+                "us_per_call": cfg.us_per_call if cfg else None,
+                "source": cfg.source if cfg else "unmeasured",
+            }
+        return out
+
     def report(self) -> dict:
         """Aggregate trace-time stage-op and collective counts for one
         forward pass of the whole net (one-shot plans), plus cost-model
@@ -150,16 +188,22 @@ class NetworkPlan:
         for name, plan in self.plans.items():
             args = [jax.ShapeDtypeStruct(plan.x_shape, jnp.float32),
                     jax.ShapeDtypeStruct(plan.k_shape, jnp.float32)]
-            kwargs = {}
+            # epilogue operands must be *traced arguments* (closures over
+            # ShapeDtypeStructs break on backends that consume them as
+            # arrays, e.g. direct's fused elementwise tail)
+            ep_keys = []
             if plan.epilogue.bias:
-                kwargs["bias"] = jax.ShapeDtypeStruct(
-                    (plan.spec.Cout,), jnp.float32)
+                ep_keys.append("bias")
+                args.append(jax.ShapeDtypeStruct(
+                    (plan.spec.Cout,), jnp.float32))
             if plan.epilogue.residual:
-                kwargs["residual"] = jax.ShapeDtypeStruct(
-                    plan.out_shape, jnp.float32)
+                ep_keys.append("residual")
+                args.append(jax.ShapeDtypeStruct(
+                    plan.out_shape, jnp.float32))
             with stage_trace() as stages:
                 jaxpr = jax.make_jaxpr(
-                    lambda x, k: plan(x, k, **kwargs))(*args)
+                    lambda x, k, *ep: plan(x, k,
+                                           **dict(zip(ep_keys, ep))))(*args)
             text = str(jaxpr)
             coll = {"all_to_all": text.count("all_to_all"),
                     "psum": text.count("psum[")}
@@ -212,6 +256,11 @@ def plan_network(layers: Sequence[NetworkConv], *, backend: str = "auto",
     layers.  Resolution goes through the shared ``plan_conv`` cache, so
     same-geometry layers (and repeat ``plan_network`` calls) share frozen
     ``ConvPlan`` objects.
+
+    With ``backend="tuned"`` this is the whole-network tuning sweep: every
+    *distinct* layer geometry is measured once (shared-cache dedupe covers
+    repeats) and ``NetworkPlan.tuning_report()`` lists the per-layer
+    winners.
     """
     names = [l.name for l in layers]
     dupes = [n for n, c in collections.Counter(names).items() if c > 1]

@@ -27,6 +27,10 @@ version returns the cached ``PreparedConv``.
 
 ``backend="auto"`` picks direct vs FFT from the ``ConvSpec`` cost model;
 ``schedule="auto"`` picks ``nfft`` when a mesh is given, else ``local``.
+``backend="tuned"`` replaces the cost model with *measured* selection
+(``repro.conv.autotune``): candidate (backend, schedule, block) configs are
+timed on the actual device, the winner is cached persistently per machine,
+and the chosen blocks ride the plan down into the Pallas kernels.
 """
 from __future__ import annotations
 
@@ -58,6 +62,7 @@ class ConvPlan:
     bm: Optional[int] = None           # Pallas CGEMM block sizes
     bn: Optional[int] = None
     bk: Optional[int] = None
+    dft_bt: Optional[int] = None       # Pallas dft_tile tile-batch block
     compute_dtype: Any = None          # CGEMM operand dtype (e.g. bf16)
     mesh: Any = None                   # jax Mesh for sharded schedules
     data_axis: str = "data"
@@ -211,8 +216,9 @@ class ConvPlan:
                 f"  mesh axes: {self.data_axis}={self.mesh.shape[self.data_axis]} "
                 f"x {self.model_axis}={self.mesh.shape[self.model_axis]}, "
                 f"replicate_kernel_transform={self.replicate_kernel_transform}")
-        if self.bm or self.bn or self.bk:
-            lines.append(f"  cgemm blocks bm={self.bm} bn={self.bn} bk={self.bk}")
+        if self.bm or self.bn or self.bk or self.dft_bt:
+            lines.append(f"  blocks bm={self.bm} bn={self.bn} bk={self.bk} "
+                         f"dft_bt={self.dft_bt}")
         if self.compute_dtype is not None:
             lines.append(f"  compute_dtype={self.compute_dtype}")
         return "\n".join(lines)
@@ -332,6 +338,20 @@ def _normalize_padding(padding) -> tuple:
     return (int(ph), int(pw))
 
 
+def _build_spec(x_shape, k_shape, padding, delta) -> ConvSpec:
+    """Validated ``ConvSpec`` for a conv geometry (shared with the
+    autotuner so cache signatures can never drift from planner
+    semantics).  Kernels larger than the tile get a widened (then-unused)
+    tile so the spec validates; only ``direct`` can execute them."""
+    B, C, H, W = x_shape
+    Cout, C2, kh, kw = k_shape
+    if C != C2:
+        raise ValueError(f"channel mismatch: input C={C}, kernel C={C2}")
+    return ConvSpec(B=B, C=C, Cout=Cout, H=H, W=W, kh=kh, kw=kw,
+                    pad_h=padding[0], pad_w=padding[1],
+                    delta=max(delta, kh, kw))
+
+
 def _auto_backend(spec: ConvSpec, three_m: bool) -> str:
     """Direct-vs-FFT crossover on the ConvSpec cost model."""
     fft = spec.cgemm_flops(three_m=three_m) + spec.transform_flops()
@@ -339,24 +359,19 @@ def _auto_backend(spec: ConvSpec, three_m: bool) -> str:
 
 
 def _resolve(x_shape, k_shape, padding, delta, backend, schedule, mesh,
-             three_m, bm, bn, bk, compute_dtype, data_axis, model_axis,
-             replicate_kernel_transform, epilogue) -> ConvPlan:
-    B, C, H, W = x_shape
-    Cout, C2, kh, kw = k_shape
-    if C != C2:
-        raise ValueError(f"channel mismatch: input C={C}, kernel C={C2}")
+             three_m, bm, bn, bk, dft_bt, compute_dtype, data_axis,
+             model_axis, replicate_kernel_transform, epilogue) -> ConvPlan:
+    _, _, kh, kw = k_shape
     # Kernels larger than the FFT tile rule out the FFT backends but are
-    # fine for direct conv: widen the (then-unused) tile so the spec
-    # validates, and let auto resolve to direct below.
+    # fine for direct conv: _build_spec widens the (then-unused) tile so
+    # the spec validates, and auto resolves to direct below.
     oversize = max(kh, kw) > delta
     if oversize and backend not in ("auto", "direct"):
         registry.get_backend(backend)        # unknown names error first
         raise ValueError(
             f"kernel {kh}x{kw} exceeds tile size delta={delta}; only the "
             f"'direct' backend supports it (requested {backend!r})")
-    spec = ConvSpec(B=B, C=C, Cout=Cout, H=H, W=W, kh=kh, kw=kw,
-                    pad_h=padding[0], pad_w=padding[1],
-                    delta=max(delta, kh, kw))
+    spec = _build_spec(x_shape, k_shape, padding, delta)
 
     # -- schedule -----------------------------------------------------------
     if schedule == "auto":
@@ -400,7 +415,7 @@ def _resolve(x_shape, k_shape, padding, delta, backend, schedule, mesh,
 
     return ConvPlan(spec=spec, backend=backend, schedule=schedule,
                     padding=padding, three_m=three_m, bm=bm, bn=bn, bk=bk,
-                    compute_dtype=compute_dtype, mesh=mesh,
+                    dft_bt=dft_bt, compute_dtype=compute_dtype, mesh=mesh,
                     data_axis=data_axis, model_axis=model_axis,
                     replicate_kernel_transform=replicate_kernel_transform,
                     epilogue=epilogue)
@@ -408,7 +423,7 @@ def _resolve(x_shape, k_shape, padding, delta, backend, schedule, mesh,
 
 def plan_conv(x_shape, k_shape, *, padding=0, delta: int = 16,
               backend: str = "auto", schedule: str = "auto", mesh=None,
-              three_m: bool = True, bm=None, bn=None, bk=None,
+              three_m: bool = True, bm=None, bn=None, bk=None, dft_bt=None,
               compute_dtype=None, data_axis: str = "data",
               model_axis: str = "model",
               replicate_kernel_transform: bool = False,
@@ -422,14 +437,21 @@ def plan_conv(x_shape, k_shape, *, padding=0, delta: int = 16,
       padding: int or ``(ph, pw)`` zero padding.
       delta: FFT tile size (the paper uses 16).
       backend: ``"direct"`` | ``"fft-xla"`` | ``"fft-pallas"`` | ``"auto"``
-        (cost-model crossover; never auto-selects Pallas).
+        (cost-model crossover; never auto-selects Pallas) | ``"tuned"``
+        (measured on-device selection via ``repro.conv.autotune`` — warm
+        persistent cache, cost-model fallback when measurement is
+        disabled; the tuner also picks schedule and blocks unless pinned
+        here).
       schedule: ``"local"`` | ``"nfft"`` | ``"wfft"`` | ``"auto"``
-        (``nfft`` when a mesh is given, else ``local``).
+        (``nfft`` when a mesh is given, else ``local``; with
+        ``backend="tuned"`` the tuner measures nfft vs wfft).
       mesh: jax Mesh with ``data_axis``/``model_axis``; required by the
         sharded schedules.  Cached plans key meshes by value
         ``(axis_names, shape, device ids)``, so equal meshes share entries.
       three_m: 3-matmul (Karatsuba) vs 4-matmul complex product.
       bm, bn, bk: Pallas CGEMM block sizes (``fft-pallas`` only).
+      dft_bt: Pallas ``dft_tile`` tile-batch block (``fft-pallas`` fused
+        inverse tail only).
       compute_dtype: CGEMM operand dtype (e.g. bf16; f32 accumulation).
         On the sharded schedules the cast happens before the hot-path
         collective (nfft boundary a2a / wfft in-stage psum), halving its
@@ -451,9 +473,35 @@ def plan_conv(x_shape, k_shape, *, padding=0, delta: int = 16,
     x_shape, k_shape = tuple(map(int, x_shape)), tuple(map(int, k_shape))
     padding = _normalize_padding(padding)
     epilogue = Epilogue() if epilogue is None else epilogue
+    if backend == "tuned":
+        # Measured selection resolves BEFORE the plan cache, so the plan
+        # is memoized under the *resolved* config: a cost-model fallback
+        # (measurement disabled / cold-and-offline) is never frozen in —
+        # once the tuning cache warms, the next call adopts the winner.
+        if max(k_shape[2], k_shape[3]) > delta:
+            backend = "direct"      # oversize kernel: only direct fits
+        else:
+            from repro.conv import autotune
+            # tune unpinned: pins constrain the *plan*, not the machine's
+            # measured winner (pinned tune() calls get their own cache key)
+            tuned = autotune.tune(
+                x_shape, k_shape, padding=padding, delta=delta,
+                schedule=schedule, mesh=mesh, three_m=three_m,
+                compute_dtype=compute_dtype, data_axis=data_axis,
+                model_axis=model_axis,
+                replicate_kernel_transform=replicate_kernel_transform)
+            backend = tuned.backend
+            if schedule == "auto":
+                schedule = tuned.schedule
+            # explicit caller overrides beat tuned blocks
+            bm = bm if bm is not None else tuned.bm
+            bn = bn if bn is not None else tuned.bn
+            bk = bk if bk is not None else tuned.bk
+            dft_bt = dft_bt if dft_bt is not None else tuned.dft_bt
     key = (x_shape, k_shape, padding, delta, backend, schedule,
-           _mesh_cache_key(mesh), three_m, bm, bn, bk, compute_dtype,
-           data_axis, model_axis, replicate_kernel_transform, epilogue)
+           _mesh_cache_key(mesh), three_m, bm, bn, bk, dft_bt,
+           compute_dtype, data_axis, model_axis,
+           replicate_kernel_transform, epilogue)
     if cache:
         with _cache_lock:
             plan = _plan_cache.get(key)
@@ -462,8 +510,9 @@ def plan_conv(x_shape, k_shape, *, padding=0, delta: int = 16,
                 _plan_cache.move_to_end(key)
                 return plan
     plan = _resolve(x_shape, k_shape, padding, delta, backend, schedule,
-                    mesh, three_m, bm, bn, bk, compute_dtype, data_axis,
-                    model_axis, replicate_kernel_transform, epilogue)
+                    mesh, three_m, bm, bn, bk, dft_bt, compute_dtype,
+                    data_axis, model_axis, replicate_kernel_transform,
+                    epilogue)
     if cache:
         with _cache_lock:
             _cache_misses += 1

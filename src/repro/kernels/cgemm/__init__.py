@@ -1,4 +1,6 @@
-from repro.kernels.cgemm.ops import cgemm_pallas
+from repro.kernels.cgemm.ops import (
+    cgemm_pallas, default_blocks, resolve_blocks,
+)
 from repro.kernels.cgemm.ref import cgemm_ref
 
-__all__ = ["cgemm_pallas", "cgemm_ref"]
+__all__ = ["cgemm_pallas", "cgemm_ref", "default_blocks", "resolve_blocks"]

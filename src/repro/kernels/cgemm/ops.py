@@ -43,6 +43,33 @@ def _default_blocks(M, N, C):
     return _round_block(M), _round_block(N), _round_block(C)
 
 
+def default_blocks(M, N, C):
+    """Heuristic (bm, bn, bk) for a (P, M, C) x (P, C, N) CGEMM — the
+    blocks used when no explicit override is given (autotune candidate
+    generation seeds its block search from this)."""
+    return _default_blocks(M, N, C)
+
+
+def resolve_blocks(M, N, C, bm=None, bn=None, bk=None):
+    """Merge explicit block overrides over the heuristic defaults.
+
+    ``None`` means "use the default"; explicit values must be positive
+    ints (operands are zero-padded up to block multiples, so any positive
+    edge is legal — the autotuner decides what's *fast*).
+    """
+    resolved = []
+    for name, v, d in zip(("bm", "bn", "bk"), (bm, bn, bk),
+                          _default_blocks(M, N, C)):
+        if v is None:
+            v = d
+        if isinstance(v, bool) or not isinstance(v, int) or v <= 0:
+            raise ValueError(
+                f"cgemm block override {name} must be a positive int or "
+                f"None, got {v!r}")
+        resolved.append(v)
+    return tuple(resolved)
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "three_m",
                                              "interpret"))
 def cgemm_pallas(Dr, Di, Gr, Gi, *, bm=None, bn=None, bk=None,
@@ -52,8 +79,7 @@ def cgemm_pallas(Dr, Di, Gr, Gi, *, bm=None, bn=None, bk=None,
         interpret = jax.default_backend() == "cpu"
     P, M, C = Dr.shape
     N = Gr.shape[-1]
-    dbm, dbn, dbk = _default_blocks(M, N, C)
-    bm, bn, bk = bm or dbm, bn or dbn, bk or dbk
+    bm, bn, bk = resolve_blocks(M, N, C, bm, bn, bk)
     Drp = _pad_to(_pad_to(Dr, 1, bm), 2, bk)
     Dip = _pad_to(_pad_to(Di, 1, bm), 2, bk)
     Grp = _pad_to(_pad_to(Gr, 1, bk), 2, bn)

@@ -1,7 +1,9 @@
 from repro.kernels.dft_tile.ops import (
     tile_fft_pallas, tile_ifft_pallas, tile_ifft_epilogue_pallas,
+    resolve_bt, DEFAULT_BT,
 )
 from repro.kernels.dft_tile.ref import tile_fft_ref, tile_ifft_ref
 
 __all__ = ["tile_fft_pallas", "tile_ifft_pallas",
-           "tile_ifft_epilogue_pallas", "tile_fft_ref", "tile_ifft_ref"]
+           "tile_ifft_epilogue_pallas", "tile_fft_ref", "tile_ifft_ref",
+           "resolve_bt", "DEFAULT_BT"]

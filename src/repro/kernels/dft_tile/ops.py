@@ -12,6 +12,9 @@ from repro.kernels.dft_tile.kernel import (
 )
 
 
+DEFAULT_BT = 256                        # tile-batch block (grid rows/step)
+
+
 def _pad_tiles(x, bt):
     n = x.shape[0]
     rem = (-n) % bt
@@ -20,14 +23,30 @@ def _pad_tiles(x, bt):
     return x
 
 
+def resolve_bt(n: int, bt=None) -> int:
+    """Merge an explicit tile-batch block override over ``DEFAULT_BT``.
+
+    ``None`` means "use the default"; explicit values must be positive
+    ints.  Either way the block is clamped to the tile count (padding a
+    6-tile problem to a 256-wide block would be pure waste).
+    """
+    if bt is None:
+        bt = DEFAULT_BT
+    if isinstance(bt, bool) or not isinstance(bt, int) or bt <= 0:
+        raise ValueError(
+            f"dft_tile block override bt must be a positive int or None, "
+            f"got {bt!r}")
+    return min(bt, max(n, 1))
+
+
 @functools.partial(jax.jit, static_argnames=("delta", "bt", "interpret"))
-def tile_fft_pallas(x, *, delta: int = 16, bt: int = 256,
+def tile_fft_pallas(x, *, delta: int = 16, bt: int | None = None,
                     interpret: bool | None = None):
     """Forward DFT of tiles: (n, delta, delta) -> 2x (n, delta, dh)."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     n = x.shape[0]
-    bt = min(bt, max(n, 1))
+    bt = resolve_bt(n, bt)
     xp = _pad_tiles(x, bt)
     Fr, Fi, Fhr, Fhi, *_ = dft_mats(delta)
     call = tile_fft_call(xp.shape[0], delta, x.dtype, bt=bt,
@@ -37,13 +56,13 @@ def tile_fft_pallas(x, *, delta: int = 16, bt: int = 256,
 
 
 @functools.partial(jax.jit, static_argnames=("delta", "bt", "interpret"))
-def tile_ifft_pallas(Zr, Zi, *, delta: int = 16, bt: int = 256,
+def tile_ifft_pallas(Zr, Zi, *, delta: int = 16, bt: int | None = None,
                      interpret: bool | None = None):
     """Inverse DFT of tiles: 2x (n, delta, dh) -> (n, delta, delta)."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     n = Zr.shape[0]
-    bt = min(bt, max(n, 1))
+    bt = resolve_bt(n, bt)
     Zrp, Zip = _pad_tiles(Zr, bt), _pad_tiles(Zi, bt)
     *_, Fvr, Fvi, Wr, Wi = dft_mats(delta)
     call = tile_ifft_call(Zrp.shape[0], delta, Zr.dtype, bt=bt,
@@ -54,7 +73,7 @@ def tile_ifft_pallas(Zr, Zi, *, delta: int = 16, bt: int = 256,
 @functools.partial(jax.jit, static_argnames=("activation", "delta", "bt",
                                              "interpret"))
 def tile_ifft_epilogue_pallas(Zr, Zi, bias, *, activation: str = "none",
-                              delta: int = 16, bt: int = 256,
+                              delta: int = 16, bt: int | None = None,
                               interpret: bool | None = None):
     """Inverse DFT of tiles with the conv epilogue fused into the tail.
 
@@ -65,7 +84,7 @@ def tile_ifft_epilogue_pallas(Zr, Zi, bias, *, activation: str = "none",
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     n = Zr.shape[0]
-    bt = min(bt, max(n, 1))
+    bt = resolve_bt(n, bt)
     Zrp, Zip = _pad_tiles(Zr, bt), _pad_tiles(Zi, bt)
     bp = _pad_tiles(bias.reshape(n, 1).astype(Zr.dtype), bt)
     *_, Fvr, Fvi, Wr, Wi = dft_mats(delta)

@@ -40,7 +40,7 @@ def serve_convnet(args):
     update is one invalidation sweep (new ``weights_version``).
     """
     from repro.configs.paper_convs import TABLE1, network_convs
-    from repro.conv import plan_network, prepared_cache_info
+    from repro.conv import autotune, plan_network, prepared_cache_info
 
     image = args.image if args.image else (64 if args.smoke else 224)
     if image % 32:
@@ -49,7 +49,21 @@ def serve_convnet(args):
                                  W=l.W * image // 224)
              for l in TABLE1 if l.name.startswith("V")]
     layers = network_convs(scale, args.batch)
-    net = plan_network(layers, backend=args.conv_backend)
+    backend = "tuned" if args.tune else args.conv_backend
+    t0 = time.time()
+    net = plan_network(layers, backend=backend)
+    if args.tune:
+        # the tuned planning sweep IS the cache warm-up: every distinct
+        # layer geometry was measured (or served from the persistent
+        # cache) before the first request executes
+        print(f"autotune sweep: {time.time() - t0:.1f}s "
+              f"(cache: {autotune.cache_path()})")
+        for name, r in net.tuning_report().items():
+            us = "cached/unmeasured" if r["us_per_call"] is None \
+                else f"{r['us_per_call']:.0f}us"
+            print(f"  {name}: {r['backend']}/{r['schedule']} "
+                  f"bm={r['bm']} bn={r['bn']} bk={r['bk']} "
+                  f"dft_bt={r['dft_bt']} {us} [{r['source']}]")
     print(net.describe())
 
     rng = np.random.default_rng(args.seed)
@@ -97,6 +111,10 @@ def main(argv=None):
                     help="serve the paper's conv trunk via plan_network "
                          "instead of an LM arch")
     ap.add_argument("--conv-backend", default="fft-xla")
+    ap.add_argument("--tune", action="store_true",
+                    help="autotune every distinct conv geometry (measured, "
+                         "persistently cached) to warm the tuning cache "
+                         "before serving; implies --convnet backend=tuned")
     ap.add_argument("--image", type=int, default=0,
                     help="convnet input size (default 224, smoke 64)")
     ap.add_argument("--smoke", action="store_true")
@@ -105,6 +123,9 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.tune and not args.convnet:
+        args.convnet = "vgg"        # --tune implies the convnet path
 
     if args.convnet:
         return serve_convnet(args)

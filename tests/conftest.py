@@ -6,7 +6,9 @@ import pytest
 # NOTE: per the dry-run contract, tests run on the REAL single CPU device —
 # XLA_FLAGS device-count forcing happens only in subprocess-based tests and
 # in repro.launch.dryrun itself.
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)              # the `benchmarks` namespace package
 
 # hypothesis is an optional test extra: property tests skip without it.
 try:

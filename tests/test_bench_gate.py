@@ -1,0 +1,137 @@
+"""Bench JSON schema tolerance + the CI perf-regression gate."""
+import json
+
+import pytest
+
+from benchmarks import bench_schema, compare_baseline, update_baseline
+
+
+# --------------------------------------------------------------------------
+# Schema: floats and {us_per_call, config} dicts both normalize
+# --------------------------------------------------------------------------
+
+def test_normalize_accepts_float_and_dict_entries():
+    data = {
+        "plain": 123.4,
+        "integral": 7,
+        "tuned": {"us_per_call": 88.0,
+                  "config": {"backend": "fft-xla", "bm": 16}},
+        "bare_dict": {"us_per_call": 9},
+    }
+    norm = bench_schema.normalize(data)
+    assert norm["plain"] == {"us_per_call": 123.4, "config": {}}
+    assert norm["integral"]["us_per_call"] == 7.0
+    assert norm["tuned"]["config"]["backend"] == "fft-xla"
+    assert norm["bare_dict"] == {"us_per_call": 9.0, "config": {}}
+
+
+@pytest.mark.parametrize("bad", [
+    {"x": "fast"}, {"x": True}, {"x": [1, 2]},
+    {"x": {"config": {}}},                       # missing us_per_call
+    {"x": {"us_per_call": "slow"}},
+    {"x": {"us_per_call": 1.0, "config": 3}},
+    "not a dict",
+])
+def test_normalize_rejects_malformed(bad):
+    with pytest.raises(ValueError):
+        bench_schema.normalize(bad)
+
+
+def test_run_py_csv_parser_still_float_only():
+    from benchmarks.run import parse_csv_rows
+    rows = parse_csv_rows("name,us_per_call\n# note\na,5.0,x\nb,oops\n")
+    assert rows == {"a": 5.0}
+
+
+# --------------------------------------------------------------------------
+# The gate
+# --------------------------------------------------------------------------
+
+def _write(path, data):
+    path.write_text(json.dumps(data))
+    return str(path)
+
+
+def test_gate_passes_within_tolerance(tmp_path, capsys):
+    base = _write(tmp_path / "base.json", {"a": 100.0, "b": 50.0})
+    cur = _write(tmp_path / "cur.json",
+                 {"a": 200.0, "b": {"us_per_call": 40.0, "config": {}}})
+    assert compare_baseline.main(
+        ["--baseline", base, "--current", cur, "--tolerance", "2.5"]) == 0
+    out = capsys.readouterr().out
+    assert "perf gate OK" in out and "2 compared" in out
+
+
+def test_gate_fails_on_synthetic_regression(tmp_path, capsys):
+    base = _write(tmp_path / "base.json", {"a": 100.0, "b": 50.0})
+    cur = _write(tmp_path / "cur.json", {"a": 300.0, "b": 50.0})
+    assert compare_baseline.main(
+        ["--baseline", base, "--current", cur, "--tolerance", "2.5"]) == 1
+    captured = capsys.readouterr()
+    assert "REGRESSED" in captured.out           # delta table row
+    assert "3.00" in captured.out                # the ratio is printed
+    assert "perf gate FAILED" in captured.err
+
+
+def test_gate_tolerance_is_a_knob(tmp_path):
+    base = _write(tmp_path / "base.json", {"a": 100.0})
+    cur = _write(tmp_path / "cur.json", {"a": 300.0})
+    assert compare_baseline.main(
+        ["--baseline", base, "--current", cur, "--tolerance", "4"]) == 0
+
+
+def test_gate_min_us_floor_skips_jitter(tmp_path, capsys):
+    base = _write(tmp_path / "base.json", {"tiny": 2.0, "big": 1000.0})
+    cur = _write(tmp_path / "cur.json", {"tiny": 50.0, "big": 1000.0})
+    assert compare_baseline.main(
+        ["--baseline", base, "--current", cur, "--min-us", "10"]) == 0
+    assert "skipped" in capsys.readouterr().out
+
+
+def test_gate_missing_and_new_entries(tmp_path, capsys):
+    base = _write(tmp_path / "base.json", {"gone": 10.0, "kept": 10.0})
+    cur = _write(tmp_path / "cur.json", {"kept": 10.0, "fresh": 10.0})
+    assert compare_baseline.main(
+        ["--baseline", base, "--current", cur]) == 0   # tolerant by default
+    out = capsys.readouterr().out
+    assert "MISSING" in out and "NEW" in out
+    assert compare_baseline.main(
+        ["--baseline", base, "--current", cur, "--strict-missing"]) == 1
+
+
+def test_gate_rejects_empty_or_malformed_current(tmp_path):
+    base = _write(tmp_path / "base.json", {"a": 1.0})
+    empty = _write(tmp_path / "empty.json", {})
+    assert compare_baseline.main(
+        ["--baseline", base, "--current", empty]) == 2
+    bad = tmp_path / "bad.json"
+    bad.write_text("{broken")
+    assert compare_baseline.main(
+        ["--baseline", base, "--current", str(bad)]) == 2
+
+
+def test_committed_baseline_is_schema_valid():
+    import os
+    path = os.path.join(os.path.dirname(compare_baseline.__file__),
+                        "BENCH_baseline.json")
+    data = bench_schema.load_normalized(path)
+    assert len(data) >= 10
+    assert all(v["us_per_call"] > 0 for v in data.values())
+
+
+def test_update_baseline_from_existing(tmp_path, capsys):
+    src = _write(tmp_path / "cur.json",
+                 {"a": 5.0, "t": {"us_per_call": 7.0,
+                                  "config": {"backend": "direct"}}})
+    out = tmp_path / "BENCH_baseline.json"
+    assert update_baseline.main(["--from", src, "--out", str(out)]) == 0
+    data = json.loads(out.read_text())
+    assert data["a"] == {"us_per_call": 5.0, "config": {}}
+    assert data["t"]["config"] == {"backend": "direct"}
+
+
+def test_update_baseline_refuses_empty(tmp_path):
+    src = _write(tmp_path / "cur.json", {})
+    with pytest.raises(SystemExit):
+        update_baseline.main(["--from", src,
+                              "--out", str(tmp_path / "o.json")])
