@@ -66,6 +66,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--json-out", default="BENCH_conv.json",
                     help="machine-readable name->us_per_call output "
                          "('' disables)")
+    ap.add_argument("--analyze-out", default="",
+                    help="also write the plan-lint profile sweep "
+                         "(repro.conv.analyze) as a JSON artifact riding "
+                         "the benchmark run ('' disables)")
     args = ap.parse_args(argv)
 
     tee = _Tee(sys.stdout)
@@ -93,7 +97,29 @@ def main(argv=None) -> dict:
         with open(args.json_out, "w") as fh:
             json.dump(rows, fh, indent=1, sort_keys=True)
         print(f"# wrote {len(rows)} entries to {args.json_out}")
+    if args.analyze_out:
+        _analyze_artifact(args.analyze_out, quick=args.quick)
     return rows
+
+
+def _analyze_artifact(path: str, quick: bool = False) -> None:
+    """Plan-lint profile artifact riding the benchmark run: every
+    registered backend x schedule swept over the paper geometries, so the
+    perf numbers ship with the structural facts (collective counts, dtype
+    flow, peak live bytes) that make them interpretable.  Violations are
+    fatal — a timing for a plan that breaks its invariants is
+    meaningless."""
+    from repro.conv.analyze import sweep
+    profiles, violations = sweep(batch=2, limit=3 if quick else None,
+                                 progress=lambda s: print(f"# {s}"))
+    payload = {k: p.to_dict() for k, p in profiles.items()}
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=1, sort_keys=True)
+    print(f"# wrote {len(payload)} plan-lint profiles to {path}")
+    if violations:
+        raise SystemExit(
+            f"plan-lint: {len(violations)} violation(s) during the "
+            f"benchmark analyze sweep")
 
 
 def _tuned_rows(quick: bool = True) -> dict:

@@ -28,3 +28,15 @@ def make_mesh(axis_shapes, axis_names, *, devices=None):
         kwargs["axis_types"] = \
             (jax.sharding.AxisType.Auto,) * len(axis_names)
     return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def jaxpr_types():
+    """The (Jaxpr, ClosedJaxpr) classes, wherever this jax version keeps
+    them (``jax.extend.core`` on current jax, ``jax.core`` on older
+    releases).  Used by the static analyzer to recurse into sub-jaxprs."""
+    try:
+        from jax.extend import core as xcore
+        return xcore.Jaxpr, xcore.ClosedJaxpr
+    except (ImportError, AttributeError):
+        from jax import core as jcore
+        return jcore.Jaxpr, jcore.ClosedJaxpr

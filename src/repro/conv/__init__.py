@@ -18,9 +18,14 @@ from repro.conv.plan import (
     plan_cache_info, clear_plan_cache, plan_cache_capacity,
     prepared_cache_info, clear_prepared_cache,
 )
+from repro.conv.registry import backend_schedule_pairs
 from repro.conv.stages import stage_counts, reset_stage_counts, stage_trace
 from repro.conv.netplan import (
-    NetworkConv, NetworkPlan, PreparedNetwork, plan_network,
+    NetworkConv, NetworkPlan, NetworkProfile, PreparedNetwork, plan_network,
+)
+from repro.conv.analyze import (
+    PlanProfile, CheckReport, Violation, analyze, register_invariant,
+    invariants_for,
 )
 from repro.conv import backends as _backends
 from repro.conv import autotune
@@ -30,13 +35,16 @@ _backends.register_builtin()
 
 __all__ = [
     "ConvPlan", "PreparedConv", "plan_conv", "conv2d", "Epilogue",
-    "NetworkConv", "NetworkPlan", "PreparedNetwork", "plan_network",
+    "NetworkConv", "NetworkPlan", "NetworkProfile", "PreparedNetwork",
+    "plan_network",
     "plan_cache_info", "clear_plan_cache", "plan_cache_capacity",
     "prepared_cache_info", "clear_prepared_cache",
     "stage_counts", "reset_stage_counts", "stage_trace",
+    "PlanProfile", "CheckReport", "Violation", "analyze",
+    "register_invariant", "invariants_for",
     "autotune", "TunedConfig", "autotune_info",
     "BackendInfo", "ScheduleInfo",
     "register_backend", "register_schedule",
     "get_backend", "get_schedule",
-    "available_backends", "available_schedules",
+    "available_backends", "available_schedules", "backend_schedule_pairs",
 ]

@@ -53,7 +53,7 @@ import json
 import os
 import threading
 import time
-from typing import Any, Optional
+from typing import Optional
 
 from repro.core.conv_spec import ConvSpec
 # shared with the planner so cache signatures can never drift from

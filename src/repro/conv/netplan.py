@@ -23,20 +23,20 @@ sweep), which is the serving lifecycle the ROADMAP north-star wants.
 
 ``NetworkPlan.report()`` aggregates trace-time stage-op and collective
 counts over the whole net, so "how many all_to_alls does one forward pass
-pay" is a queryable number instead of per-layer archaeology.
+pay" is a queryable number instead of per-layer archaeology; the counts
+come from the static analyzer (``repro.conv.analyze``), which walks each
+layer's equation tree rather than string-matching the jaxpr pretty
+printer.  ``NetworkPlan.analyze()`` exposes the full per-layer profiles
+and evaluates the invariant registry network-wide.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Any, Mapping, Optional, Sequence
-
-import jax
-import jax.numpy as jnp
+from typing import Any, Mapping, Sequence
 
 from repro.conv.epilogue import Epilogue
 from repro.conv.plan import ConvPlan, PreparedConv, plan_conv
-from repro.conv.stages import stage_trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +85,44 @@ class PreparedNetwork:
 
     def items(self):
         return self.layers.items()
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class NetworkProfile:
+    """Per-layer static-analysis profiles for a whole network, plus the
+    aggregate collective/stage totals one forward pass pays.  Certify
+    every layer against the invariant registry with ``check()``."""
+    layers: "collections.OrderedDict"          # name -> PlanProfile
+    total_collectives: dict
+    total_stage_counts: dict
+    total_collective_bytes: int
+    peak_live_bytes: int                       # max over layers
+
+    def check(self):
+        """Evaluate the invariant registry for every layer; returns a
+        list of ``(layer_name, Violation)`` (empty = certified)."""
+        out = []
+        for name, profile in self.layers.items():
+            out.extend((name, v) for v in profile.check().violations)
+        return out
+
+    def raise_if_failed(self) -> "NetworkProfile":
+        bad = self.check()
+        if bad:
+            detail = "\n  ".join(f"{n}: {v}" for n, v in bad)
+            raise AssertionError(
+                f"plan-lint: network violates {len(bad)} invariant(s):"
+                f"\n  {detail}")
+        return self
+
+    def to_dict(self) -> dict:
+        return {
+            "layers": {n: p.to_dict() for n, p in self.layers.items()},
+            "total_collectives": dict(self.total_collectives),
+            "total_stage_counts": dict(self.total_stage_counts),
+            "total_collective_bytes": self.total_collective_bytes,
+            "peak_live_bytes": self.peak_live_bytes,
+        }
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -175,52 +213,54 @@ class NetworkPlan:
             }
         return out
 
+    def analyze(self) -> NetworkProfile:
+        """Static analysis of every layer (``repro.conv.analyze``): the
+        per-layer ``PlanProfile`` plus network totals.  Same-geometry
+        layers sharing one plan are profiled once each so the totals
+        reflect one full forward pass."""
+        from repro.conv.analyze import analyze
+        total_stages: collections.Counter = collections.Counter()
+        total_coll: collections.Counter = collections.Counter()
+        total_bytes = 0
+        peak = 0
+        profiles: "collections.OrderedDict" = collections.OrderedDict()
+        for name, plan in self.plans.items():
+            p = analyze(plan)
+            profiles[name] = p
+            total_stages.update(p.stage_counts)
+            total_coll.update(p.collectives)
+            total_bytes += p.collective_bytes
+            peak = max(peak, p.peak_live_bytes)
+        return NetworkProfile(
+            layers=profiles, total_collectives=dict(total_coll),
+            total_stage_counts=dict(total_stages),
+            total_collective_bytes=total_bytes, peak_live_bytes=peak)
+
     def report(self) -> dict:
         """Aggregate trace-time stage-op and collective counts for one
         forward pass of the whole net (one-shot plans), plus cost-model
-        FLOPs.  Collectives are counted from each layer's traced program
-        (``all_to_all`` / ``psum`` equation counts), so the number reflects
-        what actually executes, schedule by schedule."""
+        FLOPs.  Counts come from the static analyzer walking each layer's
+        traced equation tree (NOT from string-matching the jaxpr pretty
+        printer), so the numbers reflect what actually executes, schedule
+        by schedule."""
+        net = self.analyze()
         per_layer = {}
-        total_stages: collections.Counter = collections.Counter()
-        total_coll: collections.Counter = collections.Counter()
         total_flops = 0
         for name, plan in self.plans.items():
-            args = [jax.ShapeDtypeStruct(plan.x_shape, jnp.float32),
-                    jax.ShapeDtypeStruct(plan.k_shape, jnp.float32)]
-            # epilogue operands must be *traced arguments* (closures over
-            # ShapeDtypeStructs break on backends that consume them as
-            # arrays, e.g. direct's fused elementwise tail)
-            ep_keys = []
-            if plan.epilogue.bias:
-                ep_keys.append("bias")
-                args.append(jax.ShapeDtypeStruct(
-                    (plan.spec.Cout,), jnp.float32))
-            if plan.epilogue.residual:
-                ep_keys.append("residual")
-                args.append(jax.ShapeDtypeStruct(
-                    plan.out_shape, jnp.float32))
-            with stage_trace() as stages:
-                jaxpr = jax.make_jaxpr(
-                    lambda x, k, *ep: plan(x, k,
-                                           **dict(zip(ep_keys, ep))))(*args)
-            text = str(jaxpr)
-            coll = {"all_to_all": text.count("all_to_all"),
-                    "psum": text.count("psum[")}
+            p = net.layers[name]
             flops = plan.flops()
             per_layer[name] = {
                 "backend": plan.backend, "schedule": plan.schedule,
                 "epilogue": plan.epilogue.describe(),
-                "stage_counts": dict(stages), "collectives": coll,
+                "stage_counts": dict(p.stage_counts),
+                "collectives": dict(p.collectives),
                 "flops": flops,
             }
-            total_stages.update(stages)
-            total_coll.update(coll)
             total_flops += flops
         return {
             "layers": per_layer,
-            "total_stage_counts": dict(total_stages),
-            "total_collectives": dict(total_coll),
+            "total_stage_counts": dict(net.total_stage_counts),
+            "total_collectives": dict(net.total_collectives),
             "total_flops": total_flops,
             "n_layers": len(self.plans),
             "n_distinct_plans": len({id(p) for p in self.plans.values()}),

@@ -175,6 +175,15 @@ class ConvPlan:
         return prepared
 
     # ---- introspection ----------------------------------------------------
+    def analyze(self, *, prepared: bool = False):
+        """Static analysis of this plan's traced program: collective
+        counts, dtype flow, fusion/elision facts, peak live bytes — see
+        ``repro.conv.analyze``.  ``analyze(prepared=True)`` profiles the
+        prepared-execute path (kernel layout derived abstractly; no
+        transform FLOPs run).  Certify with ``plan.analyze().check()``."""
+        from repro.conv.analyze import analyze
+        return analyze(self, prepared=prepared)
+
     @property
     def x_shape(self) -> tuple:
         s = self.spec
@@ -192,7 +201,8 @@ class ConvPlan:
 
     @property
     def differentiable(self) -> bool:
-        return self.schedule in registry.get_backend(self.backend).differentiable
+        be = registry.get_backend(self.backend)
+        return self.schedule in be.differentiable
 
     def flops(self) -> int:
         """Cost-model FLOPs of the planned path (for rooflines)."""
@@ -208,14 +218,16 @@ class ConvPlan:
             f"  backend={self.backend} schedule={self.schedule} "
             f"three_m={self.three_m} delta={s.delta} "
             f"epilogue={self.epilogue.describe()}",
-            f"  cost-model FLOPs: direct {s.direct_flops():.3e}, "
-            f"fft {s.cgemm_flops(three_m=self.three_m) + s.transform_flops():.3e}",
+            f"  cost-model FLOPs: direct {s.direct_flops():.3e}, fft "
+            f"{s.cgemm_flops(three_m=self.three_m) + s.transform_flops():.3e}",
         ]
         if self.mesh is not None:
+            n_data = self.mesh.shape[self.data_axis]
+            n_model = self.mesh.shape[self.model_axis]
             lines.append(
-                f"  mesh axes: {self.data_axis}={self.mesh.shape[self.data_axis]} "
-                f"x {self.model_axis}={self.mesh.shape[self.model_axis]}, "
-                f"replicate_kernel_transform={self.replicate_kernel_transform}")
+                f"  mesh axes: {self.data_axis}={n_data} "
+                f"x {self.model_axis}={n_model}, replicate_kernel_transform="
+                f"{self.replicate_kernel_transform}")
         if self.bm or self.bn or self.bk or self.dft_bt:
             lines.append(f"  blocks bm={self.bm} bn={self.bn} bk={self.bk} "
                          f"dft_bt={self.dft_bt}")
@@ -253,6 +265,13 @@ class PreparedConv:
     @property
     def out_shape(self) -> tuple:
         return self.plan.out_shape
+
+    def analyze(self):
+        """Static analysis of the prepared execution path (stage 2 and —
+        for nfft — boundary all-to-all #2 must be absent from the traced
+        program); see ``repro.conv.analyze``."""
+        from repro.conv.analyze import analyze
+        return analyze(self)
 
 
 # --------------------------------------------------------------------------

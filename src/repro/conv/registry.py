@@ -143,3 +143,13 @@ def available_backends() -> tuple:
 
 def available_schedules() -> tuple:
     return tuple(sorted(_SCHEDULES))
+
+
+def backend_schedule_pairs() -> tuple:
+    """Every registered (backend, schedule) combination, in registry
+    order.  This is the sweep surface of the static analyzer
+    (``repro.conv.analyze --check``): a newly registered backend is
+    automatically certified against the invariant registry on every
+    schedule it declares."""
+    return tuple((b, s) for b in available_backends()
+                 for s in _BACKENDS[b].schedules)

@@ -40,8 +40,15 @@ context manager::
         jax.make_jaxpr(plan)(x, k)
     assert counts["cgemm"] == 1
 
-``stage_counts()`` / ``reset_stage_counts()`` remain as shims over a
-process-global counter (lock-guarded) for existing callers.
+``stage_counts()`` / ``reset_stage_counts()`` remain as *deprecated*
+shims over a process-global counter (lock-guarded): they are not
+thread-safe to use (any concurrent trace bleeds into the shared counter)
+and emit a ``DeprecationWarning`` pointing at ``stage_trace()`` / the
+``repro.conv.analyze`` profiler.
+
+Traces also record dtype facts as ``("cgemm_dtype", <dtype>)`` tuple keys
+alongside the plain string op counts — the static analyzer reads these to
+certify that ``compute_dtype`` actually reached the hot stage.
 """
 from __future__ import annotations
 
@@ -49,6 +56,7 @@ import collections
 import contextlib
 import functools
 import threading
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -104,13 +112,27 @@ def stage_trace():
 
 
 def stage_counts() -> dict:
-    """Process-global trace-time invocation counts per stage op (shim —
-    prefer ``stage_trace()`` for isolation)."""
+    """Deprecated: process-global trace-time invocation counts per stage
+    op.  The module-global counter is shared across threads (concurrent
+    planners/tracers bleed into each other); use the scoped
+    ``stage_trace()`` context manager, or ``repro.conv.analyze`` for
+    structured per-plan profiles."""
+    warnings.warn(
+        "stage_counts() reads a thread-unsafe module-global counter; use "
+        "the stage_trace() context manager or repro.conv.analyze instead",
+        DeprecationWarning, stacklevel=2)
     with _trace_lock:
         return dict(_global_counts)
 
 
 def reset_stage_counts() -> None:
+    """Deprecated: clears the module-global counter behind
+    ``stage_counts()`` — see that function's deprecation note."""
+    warnings.warn(
+        "reset_stage_counts() mutates a thread-unsafe module-global "
+        "counter; use the stage_trace() context manager or "
+        "repro.conv.analyze instead",
+        DeprecationWarning, stacklevel=2)
     with _trace_lock:
         _global_counts.clear()
 
@@ -131,6 +153,9 @@ def stage_kernel_transform(k, spec: ConvSpec):
 
 def stage_cgemm(Dr, Di, Gr, Gi, *, three_m: bool, cgemm_fn=None):
     _count("cgemm")
+    # dtype-flow fact for the analyzer: which dtype the hot stage actually
+    # consumed (tuple keys ride the same counters as the op counts)
+    _count(("cgemm_dtype", str(jnp.result_type(Dr, Gr))))
     mm = cgemm_fn if cgemm_fn is not None else functools.partial(
         cgemm, three_m=three_m)
     return mm(Dr, Di, Gr, Gi)

@@ -65,6 +65,13 @@ def serve_convnet(args):
                   f"bm={r['bm']} bn={r['bn']} bk={r['bk']} "
                   f"dft_bt={r['dft_bt']} {us} [{r['source']}]")
     print(net.describe())
+    if args.analyze:
+        prof = net.analyze().raise_if_failed()
+        t = prof.total_collectives
+        print(f"plan-lint: OK — {len(prof.layers)} layers certified, "
+              f"collectives/pass: all_to_all={t.get('all_to_all', 0)} "
+              f"psum={t.get('psum', 0)}, "
+              f"peak live ~{prof.peak_live_bytes / 1e6:.1f} MB/rank")
 
     rng = np.random.default_rng(args.seed)
     def init(shape, s=0.05):
@@ -117,6 +124,10 @@ def main(argv=None):
                          "before serving; implies --convnet backend=tuned")
     ap.add_argument("--image", type=int, default=0,
                     help="convnet input size (default 224, smoke 64)")
+    ap.add_argument("--analyze", action="store_true",
+                    help="plan-lint the planned convnet (static analyzer, "
+                         "repro.conv.analyze) before serving; aborts if "
+                         "any structural invariant is violated")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)

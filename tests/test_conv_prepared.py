@@ -1,5 +1,5 @@
 """Prepare/execute split: cached kernel transforms, stage-2 amortization
-(counter + jaxpr), and weights-version invalidation."""
+(certified via the static analyzer), and weights-version invalidation."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,8 +7,8 @@ import pytest
 
 from repro.compat import make_mesh
 from repro.conv import (
-    plan_conv, clear_prepared_cache, prepared_cache_info,
-    stage_counts, reset_stage_counts,
+    analyze, plan_conv, clear_prepared_cache, prepared_cache_info,
+    stage_trace,
 )
 from repro.core import conv2d_direct
 
@@ -52,42 +52,40 @@ def test_prepared_matches_one_shot_sharded(schedule):
 def test_prepared_nfft_skips_stage2_and_boundary_a2a2():
     """The acceptance check: a prepared nfft execution must trace ZERO
     kernel-transform stages and one fewer all_to_all boundary (re/im pair)
-    than the one-shot plan — stage 2 and boundary a2a #2 are amortized."""
+    than the one-shot plan — stage 2 and boundary a2a #2 are amortized.
+    Counts come from the static analyzer walking the traced equation tree
+    (no pretty-printer string matching)."""
     mesh = make_mesh((1, 1), ("data", "model"))
     x, k = _rand((2, 4, 20, 20), 5), _rand((4, 4, 3, 3), 6)
     plan = plan_conv(x.shape, k.shape, padding=1, schedule="nfft", mesh=mesh)
-    prepared = plan.prepare(k)
+    prep = analyze(plan.prepare(k))
+    full = analyze(plan)
 
-    reset_stage_counts()
-    jaxpr_prepared = str(jax.make_jaxpr(prepared)(x))
-    prep_counts = stage_counts()
-
-    reset_stage_counts()
-    jaxpr_full = str(jax.make_jaxpr(lambda a, b: plan(a, b))(x, k))
-    full_counts = stage_counts()
-    reset_stage_counts()
-
-    assert prep_counts.get("kernel_transform", 0) == 0
-    assert full_counts["kernel_transform"] == 1
-    assert prep_counts["boundary_a2a"] == 2        # a2a #1 and #3 only
-    assert full_counts["boundary_a2a"] == 3
-    # and the traced program agrees: 4 all_to_all eqns (2 boundaries x
-    # re/im) vs 6 for the one-shot path
-    assert jaxpr_prepared.count("all_to_all") == 4
-    assert jaxpr_full.count("all_to_all") == 6
+    assert prep.stage_counts.get("kernel_transform", 0) == 0
+    assert full.stage_counts["kernel_transform"] == 1
+    assert prep.stage_counts["boundary_a2a"] == 2  # a2a #1 and #3 only
+    assert full.stage_counts["boundary_a2a"] == 3
+    # the traced program agrees: 4 all_to_all eqns (2 boundaries x re/im)
+    # vs 6 for the one-shot path, and the elision is exactly one a2a pair
+    # plus the kernel transform
+    assert prep.collectives["all_to_all"] == 4
+    assert full.collectives["all_to_all"] == 6
+    assert prep.elision == {"all_to_all": 2, "psum": 0, "ppermute": 0,
+                            "all_gather": 0, "kernel_transform": 1}
+    # and both variants satisfy the registered invariants
+    assert prep.check().ok and full.check().ok
 
 
 def test_prepare_runs_stage2_eagerly_not_per_execute():
     x, k = _rand((1, 2, 12, 12), 7), _rand((2, 2, 3, 3), 8)
     plan = plan_conv(x.shape, k.shape, padding=1, backend="fft-xla")
-    reset_stage_counts()
-    prepared = plan.prepare(k)
-    assert stage_counts()["kernel_transform"] == 1
-    reset_stage_counts()
-    prepared(x)
-    prepared(x)
-    assert stage_counts().get("kernel_transform", 0) == 0
-    reset_stage_counts()
+    with stage_trace() as prep_counts:
+        prepared = plan.prepare(k)
+    assert prep_counts["kernel_transform"] == 1
+    with stage_trace() as exec_counts:
+        prepared(x)
+        prepared(x)
+    assert exec_counts.get("kernel_transform", 0) == 0
 
 
 def test_weights_version_invalidation():
