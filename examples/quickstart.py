@@ -13,6 +13,7 @@ import numpy as np
 
 from repro.conv import plan_conv, plan_cache_info
 from repro.core import conv2d_direct
+from repro.core.fftconv import freq_count
 
 rng = np.random.default_rng(0)
 
@@ -30,7 +31,8 @@ print(plan.describe())
 
 spec = plan.spec
 print(f"tiling: {spec.X}x{spec.D} tiles of {spec.delta}x{spec.delta}, "
-      f"P={spec.P} frequency points, CGEMM {spec.M}x{spec.C}x{spec.Cout}")
+      f"P={freq_count(spec, plan.spectrum)} frequency points "
+      f"({plan.spectrum} layout), CGEMM {spec.M}x{spec.C}x{spec.Cout}")
 
 # The cost model sends small geometries to the direct backend instead.
 tiny = plan_conv((1, 3, 16, 16), (4, 3, 1, 1))

@@ -5,8 +5,7 @@
     y = plan(x, k)
 
 See docs/conv_api.md for the backend/schedule matrix and migration notes
-from the deprecated ``fft_conv2d`` / ``fft_conv2d_pallas`` /
-``fft_conv2d_sharded`` entry points.
+from the deprecated ``fft_conv2d`` / ``fft_conv2d_pallas`` entry points.
 """
 from repro.conv.registry import (
     BackendInfo, ScheduleInfo, register_backend, register_schedule,
@@ -19,7 +18,7 @@ from repro.conv.plan import (
     prepared_cache_info, clear_prepared_cache,
 )
 from repro.conv.registry import backend_schedule_pairs
-from repro.conv.stages import stage_counts, reset_stage_counts, stage_trace
+from repro.conv.stages import stage_trace
 from repro.conv.netplan import (
     NetworkConv, NetworkPlan, NetworkProfile, PreparedNetwork, plan_network,
 )
@@ -39,7 +38,7 @@ __all__ = [
     "plan_network",
     "plan_cache_info", "clear_plan_cache", "plan_cache_capacity",
     "prepared_cache_info", "clear_prepared_cache",
-    "stage_counts", "reset_stage_counts", "stage_trace",
+    "stage_trace",
     "PlanProfile", "CheckReport", "Violation", "analyze",
     "register_invariant", "invariants_for",
     "autotune", "TunedConfig", "autotune_info",

@@ -43,11 +43,20 @@ On top of the profile sits a declarative invariant registry keyed by
                               CGEMM operands in compute_dtype
     *        * + epilogue     zero extra collectives, zero extra stage ops
     *        *                no f64 anywhere in the traced program
+    *        nfft (real)      <= 0.55x the boundary all-to-all bytes of
+                              the plan's full-spectrum (complex) twin
+    *        wfft (real)      <= 0.55x the hot psum bytes of the twin
+
+The real-spectrum rules are *relative*: ``analyze`` traces the same plan
+with ``spectrum="complex"`` (``dataclasses.replace`` twin) and compares
+collective operand bytes — certifying that the compact Hermitian packing
+actually halves what the wires move, not merely that it exists.
 
 ``python -m repro.conv.analyze --check`` sweeps every registered
 backend x schedule pair over the paper geometries
 (``configs/paper_convs.py``) x {full, prepared, fused-epilogue,
-compute-dtype} variants and exits non-zero on any violation — the CI gate
+compute-dtype, complex-spectrum} variants and exits non-zero on any
+violation — the CI gate
 that keeps future perf work honest.  ``seeded_violation(...)`` breaks the
 pipelines on purpose so the gate itself is testable.
 """
@@ -189,11 +198,15 @@ class PlanProfile:
     n_eqns: int
     epilogue_delta: Optional[Dict[str, Dict[str, int]]] = None
     elision: Optional[Dict[str, int]] = None   # full minus prepared counts
+    spectrum: str = "real"                     # plan frequency layout
+    spectrum_delta: Optional[Dict[str, Any]] = None  # vs complex twin
 
     def describe_key(self) -> str:
         tags = [self.backend, self.schedule]
         if self.prepared:
             tags.append("prepared")
+        if self.spectrum != "real":
+            tags.append(self.spectrum)
         if self.epilogue != "none":
             tags.append(f"ep={self.epilogue}")
         if self.compute_dtype:
@@ -333,6 +346,23 @@ def _rule_epilogue_free(p: PlanProfile) -> Optional[str]:
     return "; ".join(bad) or None
 
 
+_RFFT_BYTES_RATIO = 0.55
+
+
+def _rule_rfft_halves_collective_bytes(p: PlanProfile) -> Optional[str]:
+    if p.spectrum != "real" or not p.spectrum_delta:
+        return None
+    ratio = p.spectrum_delta.get("ratio")
+    if ratio is not None and ratio > _RFFT_BYTES_RATIO:
+        return (f"real-spectrum plan moves {ratio:.4f}x the collective "
+                f"bytes of its full-spectrum twin "
+                f"({p.spectrum_delta.get('collective_bytes')} vs "
+                f"{p.spectrum_delta.get('twin_collective_bytes')}); the "
+                f"compact Hermitian packing must stay <= "
+                f"{_RFFT_BYTES_RATIO}x")
+    return None
+
+
 def _rule_prepared_elides_boundary(p: PlanProfile) -> Optional[str]:
     if not (p.prepared and p.elision):
         return None
@@ -368,6 +398,16 @@ def _register_builtin_invariants() -> None:
         "*", "wfft", "wfft-hot-cast",
         _rule_cast_before_hot_collective("psum", 2),
         "compute_dtype cast lands before the hot-stage psum pair")
+    register_invariant(
+        "*", "nfft", "nfft-rfft-halves-a2a",
+        _rule_rfft_halves_collective_bytes,
+        "the compact half-spectrum nfft plan moves <= 0.55x the boundary "
+        "all-to-all bytes of its full-spectrum (complex) twin")
+    register_invariant(
+        "*", "wfft", "wfft-rfft-halves-psum",
+        _rule_rfft_halves_collective_bytes,
+        "the compact half-spectrum wfft plan moves <= 0.55x the hot psum "
+        "bytes of its full-spectrum (complex) twin")
     register_invariant(
         "*", "*", "stage-ops-once", _rule_stage_ops_once,
         "each pipeline stage op traces exactly once (stage 2 zero times "
@@ -514,7 +554,8 @@ def _profile_from_trace(plan, jaxpr, counts, *, prepared: bool):
         collectives=colls, collective_dtypes=coll_dtypes,
         collective_bytes=coll_bytes, stage_counts=stage_counts,
         cgemm_dtypes=cgemm_dtypes, has_f64=f64[0],
-        peak_live_bytes=_peak_live_bytes(jaxpr.jaxpr), n_eqns=n_eqns[0])
+        peak_live_bytes=_peak_live_bytes(jaxpr.jaxpr), n_eqns=n_eqns[0],
+        spectrum=getattr(plan, "spectrum", "real"))
 
 
 def analyze(target, *, prepared: bool = False) -> PlanProfile:
@@ -575,6 +616,26 @@ def analyze(target, *, prepared: bool = False) -> PlanProfile:
                 for n in set(profile.stage_counts) | set(bp.stage_counts)},
         }
         profile = dataclasses.replace(profile, epilogue_delta=delta)
+
+    # Real-spectrum plans on sharded schedules get a bytes-ratio profile
+    # against their full-spectrum twin (same plan, spectrum="complex") so
+    # the halved-collective-bytes invariant is certified *relatively* —
+    # the twin is traced at the same prepared-ness, never executed.
+    if profile.is_pipeline and plan.spectrum == "real" \
+            and plan.schedule in ("nfft", "wfft"):
+        twin = dataclasses.replace(plan, spectrum="complex")
+        if prepared:
+            tp = _profile_from_trace(twin, *_trace_prepared(twin),
+                                     prepared=True)
+        else:
+            tp = _profile_from_trace(twin, *_trace_full(twin),
+                                     prepared=False)
+        ratio = (profile.collective_bytes / tp.collective_bytes
+                 if tp.collective_bytes else None)
+        profile = dataclasses.replace(profile, spectrum_delta={
+            "collective_bytes": profile.collective_bytes,
+            "twin_collective_bytes": tp.collective_bytes,
+            "ratio": ratio})
     return profile
 
 
@@ -582,7 +643,8 @@ def analyze(target, *, prepared: bool = False) -> PlanProfile:
 # Seeded violations (negative testing of the gate itself)
 # --------------------------------------------------------------------------
 
-VIOLATION_MODES = ("extra-collective", "extra-stage", "skip-cast")
+VIOLATION_MODES = ("extra-collective", "extra-stage", "skip-cast",
+                   "rfft-unpacked")
 
 
 @contextlib.contextmanager
@@ -594,7 +656,11 @@ def seeded_violation(mode: str = "extra-collective"):
                         hot path gains reductions it must not have);
       extra-stage       the kernel transform runs twice per trace;
       skip-cast         compute_dtype casts silently dropped (collectives
-                        move full-width bytes again).
+                        move full-width bytes again);
+      rfft-unpacked     the compact-Hermitian pack degrades to a plain
+                        half-plane flatten — real-spectrum plans ship the
+                        redundant self-conjugate rows again and the
+                        bytes-ratio invariants must trip.
     """
     from repro.conv import stages
     if mode == "extra-collective":
@@ -613,15 +679,32 @@ def seeded_violation(mode: str = "extra-collective"):
     elif mode == "extra-stage":
         orig = stages.stage_kernel_transform
 
-        def broken(k, spec):
-            orig(k, spec)
-            return orig(k, spec)
+        def broken(k, spec, spectrum="rect"):
+            orig(k, spec, spectrum)
+            return orig(k, spec, spectrum)
 
         stages.stage_kernel_transform = broken
         try:
             yield
         finally:
             stages.stage_kernel_transform = orig
+    elif mode == "rfft-unpacked":
+        from repro.core import fftconv
+
+        orig = fftconv.pack_half_spectrum
+
+        def broken(Tr, Ti, delta):
+            # keep the full half-plane (delta x (delta//2+1)) flattened:
+            # shape-consistent downstream (unpack reads a prefix) but the
+            # redundant conjugate rows ride every collective again
+            return (Tr.reshape(*Tr.shape[:-2], -1),
+                    Ti.reshape(*Ti.shape[:-2], -1))
+
+        fftconv.pack_half_spectrum = broken
+        try:
+            yield
+        finally:
+            fftconv.pack_half_spectrum = orig
     elif mode == "skip-cast":
         orig = stages._maybe_cast
 
@@ -655,8 +738,9 @@ def _paper_geometries(batch: int, limit: Optional[int] = None):
 def sweep(*, batch: int = 4, limit: Optional[int] = None,
           compute_dtype="bfloat16", progress=print):
     """Profile + check every registered backend x schedule pair over the
-    paper geometries x {full, prepared, fused-epilogue, compute-dtype}
-    variants.  Returns ``(profiles, violations)`` where ``profiles`` maps
+    paper geometries x {full, prepared, fused-epilogue, compute-dtype,
+    full-spectrum (complex)} variants.  Returns ``(profiles,
+    violations)`` where ``profiles`` maps
     ``"backend/schedule/layer/variant"`` to a ``PlanProfile``."""
     import jax.numpy as jnp
     from repro.compat import make_mesh
@@ -685,6 +769,10 @@ def sweep(*, batch: int = 4, limit: Optional[int] = None,
             ]
             if cdt is not None:
                 variants.append(("cdtype", {"compute_dtype": cdt}, False))
+            if registry.get_backend(backend).pipeline_factory is not None:
+                # the full-spectrum twin is a legal plan in its own right
+                # — certify it directly, not only as a ratio baseline
+                variants.append(("complex", {"spectrum": "complex"}, False))
             for variant, extra, as_prepared in variants:
                 key = f"{backend}/{schedule}/{name}/{variant}"
                 plan = plan_conv(x_shape, k_shape, **base, **extra)

@@ -74,7 +74,8 @@ def _transposed_plan(plan):
         bm=plan.bm, bn=plan.bn, bk=plan.bk,
         compute_dtype=plan.compute_dtype, data_axis=plan.data_axis,
         model_axis=plan.model_axis,
-        replicate_kernel_transform=plan.replicate_kernel_transform)
+        replicate_kernel_transform=plan.replicate_kernel_transform,
+        spectrum=plan.spectrum)
 
 
 def _dx_via_transposed_plan(plan, k, dz):

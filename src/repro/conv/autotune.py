@@ -12,8 +12,9 @@ or, threaded through the planner:
 
     plan = plan_conv(x_shape, k_shape, padding=1, backend="tuned")
 
-``tune`` times every candidate (backend, schedule, cgemm ``bm/bn/bk``,
-``dft_tile`` ``dft_bt``) configuration on the actual device — warmup then
+``tune`` times every candidate (backend, schedule, frequency-layout
+``spectrum``, cgemm ``bm/bn/bk``, ``dft_tile`` ``dft_bt``) configuration
+on the actual device — warmup then
 median-of-k, under a wall-clock budget — and persists the winner in a JSON
 tuning cache so the tuning cost is paid once per machine.  Cache entries are
 keyed by the spec signature + device kind + jax version: a new device or a
@@ -62,7 +63,7 @@ from repro.core.conv_spec import ConvSpec
 from repro.conv.plan import _build_spec as _make_spec
 from repro.conv.plan import _normalize_padding
 
-CACHE_VERSION = 1
+CACHE_VERSION = 2
 
 _DEFAULT_CACHE = os.path.join("~", ".cache", "repro_autotune.json")
 _DEFAULT_BUDGET_MS = 2000.0
@@ -86,6 +87,7 @@ class TunedConfig:
     bn: Optional[int] = None
     bk: Optional[int] = None
     dft_bt: Optional[int] = None       # dft_tile tile-batch block
+    spectrum: str = "real"             # frequency layout (FFT pipelines)
     us_per_call: Optional[float] = None
     source: str = "measured"
 
@@ -254,13 +256,14 @@ def spec_signature(x_shape, k_shape, *, padding=(0, 0), delta: int = 16,
                    compute_dtype=None, data_axis: str = "data",
                    model_axis: str = "model",
                    replicate_kernel_transform: bool = False,
+                   spectrum: str = "auto",
                    bm=None, bn=None, bk=None, dft_bt=None) -> str:
     """Device-independent part of the cache key: the problem + the
     constraints the caller put on the tuner (requested schedule, mesh,
-    precision, kernel-transform placement, pinned blocks).  Two calls
-    that could legally get different winners must get different
-    signatures — a pin-constrained sweep must never answer for an
-    unconstrained one."""
+    precision, kernel-transform placement, requested spectrum, pinned
+    blocks).  Two calls that could legally get different winners must get
+    different signatures — a pin-constrained sweep must never answer for
+    an unconstrained one."""
     pad = _normalize_padding(padding)
     return (f"v{CACHE_VERSION}"
             f"|x={tuple(map(int, x_shape))}|k={tuple(map(int, k_shape))}"
@@ -269,6 +272,7 @@ def spec_signature(x_shape, k_shape, *, padding=(0, 0), delta: int = 16,
             f"|dtype={_dtype_name(compute_dtype)}"
             f"|axes={data_axis},{model_axis}"
             f"|rkt={int(bool(replicate_kernel_transform))}"
+            f"|spec={spectrum}"
             f"|pins={bm},{bn},{bk},{dft_bt}")
 
 
@@ -310,40 +314,63 @@ def _merge_pins(cand: TunedConfig, bm, bn, bk, dft_bt) -> TunedConfig:
 
 
 def candidates(spec: ConvSpec, *, schedule: str = "auto", mesh=None,
-               three_m: bool = True, bm=None, bn=None, bk=None,
-               dft_bt=None) -> list:
+               three_m: bool = True, spectrum: str = "auto",
+               bm=None, bn=None, bk=None, dft_bt=None) -> list:
     """Enumerate the tuning space, cost-model pick first (so a clamped
     budget still measures the sane default), Pallas configs last (interpret
-    mode on CPU makes them the most expensive to time)."""
+    mode on CPU makes them the most expensive to time).
+
+    ``spectrum="auto"`` adds a real-vs-complex frequency-layout axis for
+    the FFT backends (the compact half-spectrum wins on bandwidth-bound
+    geometries, the full spectrum can win when the packing gather
+    dominates); ``direct`` has no spectrum and is tuned as ``"real"``
+    only.  Pinning ``spectrum`` collapses the axis."""
     if schedule != "auto":
         scheds = [schedule]
     else:
         scheds = ["nfft", "wfft"] if mesh is not None else ["local"]
+    spectra = ["real", "complex"] if spectrum == "auto" else [spectrum]
     out = []
     for sched in scheds:
         local = sched == "local"
         backends = (["direct", "fft-xla", "fft-pallas"] if local
                     else ["fft-xla", "fft-pallas"])
         for be in backends:
-            if be != "fft-pallas":
-                out.append(TunedConfig(be, sched))
+            if be == "direct":
+                # the direct pipeline never builds a spectrum; a pinned
+                # spectrum="complex" sweep excludes it (plan_conv rejects
+                # the pair)
+                if "real" in spectra:
+                    out.append(TunedConfig(be, sched, spectrum="real"))
                 continue
-            bts = [None, 64] if local else [None]
-            for blocks in _block_candidates(spec):
-                for bt in bts:
-                    out.append(TunedConfig(be, sched, *blocks, dft_bt=bt))
+            for spc in spectra:
+                if be != "fft-pallas":
+                    out.append(TunedConfig(be, sched, spectrum=spc))
+                    continue
+                if spc != "real":
+                    # complex Pallas takes the composed stage-4 path (no
+                    # fused tail) — time only the default-block point
+                    out.append(TunedConfig(be, sched, spectrum=spc))
+                    continue
+                bts = [None, 64] if local else [None]
+                for blocks in _block_candidates(spec):
+                    for bt in bts:
+                        out.append(TunedConfig(be, sched, *blocks,
+                                               dft_bt=bt, spectrum=spc))
     out = [_merge_pins(c, bm, bn, bk, dft_bt) for c in out]
     # dedupe (pins can collapse block variants) preserving order
     seen, uniq = set(), []
     for c in out:
-        key = (c.backend, c.schedule, c.bm, c.bn, c.bk, c.dft_bt)
+        key = (c.backend, c.schedule, c.bm, c.bn, c.bk, c.dft_bt,
+               c.spectrum)
         if key not in seen:
             seen.add(key)
             uniq.append(c)
     # cost-model pick first (``_auto_backend`` never picks Pallas, so the
     # pick is always a single candidate), Pallas variants last
     pick = _cost_model_pick(spec, scheds[0], three_m)
-    uniq.sort(key=lambda c: 0 if (c.backend, c.schedule) == pick
+    uniq.sort(key=lambda c: 0 if ((c.backend, c.schedule) == pick
+                                  and c.spectrum == "real")
               else 1 if c.backend != "fft-pallas" else 2)
     return uniq
 
@@ -387,6 +414,7 @@ def _measure_candidate(cand: TunedConfig, x_shape, k_shape, *, padding,
                      backend=cand.backend, schedule=cand.schedule,
                      mesh=mesh, three_m=three_m, bm=cand.bm, bn=cand.bn,
                      bk=cand.bk, dft_bt=cand.dft_bt,
+                     spectrum=cand.spectrum,
                      compute_dtype=compute_dtype, data_axis=data_axis,
                      model_axis=model_axis,
                      replicate_kernel_transform=replicate_kernel_transform,
@@ -404,12 +432,15 @@ def _measure_candidate(cand: TunedConfig, x_shape, k_shape, *, padding,
 # --------------------------------------------------------------------------
 
 def _cost_model_config(spec: ConvSpec, schedule: str, mesh, three_m,
-                       bm, bn, bk, dft_bt) -> TunedConfig:
+                       spectrum, bm, bn, bk, dft_bt) -> TunedConfig:
     if schedule == "auto":
         schedule = "nfft" if mesh is not None else "local"
     backend, _ = _cost_model_pick(spec, schedule, three_m)
+    if spectrum == "auto" or backend == "direct":
+        spectrum = "real"               # compact layout is the engine default
     return TunedConfig(backend, schedule, bm=bm, bn=bn, bk=bk,
-                       dft_bt=dft_bt, us_per_call=None, source="cost-model")
+                       dft_bt=dft_bt, spectrum=spectrum,
+                       us_per_call=None, source="cost-model")
 
 
 def tune(x_shape, k_shape, *, padding=(0, 0), delta: int = 16,
@@ -417,6 +448,7 @@ def tune(x_shape, k_shape, *, padding=(0, 0), delta: int = 16,
          compute_dtype=None, data_axis: str = "data",
          model_axis: str = "model",
          replicate_kernel_transform: bool = False,
+         spectrum: str = "auto",
          bm=None, bn=None, bk=None, dft_bt=None,
          budget: Optional[float] = None,
          reps: Optional[int] = None) -> TunedConfig:
@@ -434,6 +466,7 @@ def tune(x_shape, k_shape, *, padding=(0, 0), delta: int = 16,
                       compute_dtype=compute_dtype, data_axis=data_axis,
                       model_axis=model_axis,
                       replicate_kernel_transform=replicate_kernel_transform,
+                      spectrum=spectrum,
                       bm=bm, bn=bn, bk=bk, dft_bt=dft_bt)
     key = cache_key(x_shape, k_shape, **key_kwargs)
     store = _store()
@@ -448,12 +481,12 @@ def tune(x_shape, k_shape, *, padding=(0, 0), delta: int = 16,
         with _lock:
             _fallbacks += 1
         return _cost_model_config(spec, schedule, mesh, three_m,
-                                  bm, bn, bk, dft_bt)
+                                  spectrum, bm, bn, bk, dft_bt)
     with _lock:
         _misses += 1
 
     cands = candidates(spec, schedule=schedule, mesh=mesh, three_m=three_m,
-                       bm=bm, bn=bn, bk=bk, dft_bt=dft_bt)
+                       spectrum=spectrum, bm=bm, bn=bn, bk=bk, dft_bt=dft_bt)
     budget = budget_ms() if budget is None else float(budget)
     reps = _env_reps() if reps is None else max(1, int(reps))
     best = None
@@ -477,7 +510,7 @@ def tune(x_shape, k_shape, *, padding=(0, 0), delta: int = 16,
         with _lock:
             _fallbacks += 1
         return _cost_model_config(spec, schedule, mesh, three_m,
-                                  bm, bn, bk, dft_bt)
+                                  spectrum, bm, bn, bk, dft_bt)
     with _lock:
         _measured += 1
     store.put(key, best)

@@ -71,6 +71,26 @@ def _pallas_fused_inverse(Zr, Zi, spec, epilogue, bias, *, bt=None):
     return F.assemble_output_tiles(y.reshape(B, Co, X, Dl, d, d), spec)
 
 
+def _pallas_fused_inverse_real(Zr, Zi, spec, epilogue, bias, *, bt=None):
+    """The ``spectrum="real"`` fused stage-4 tail: compact-layout scatter +
+    inverse DFT + bias + activation in one ``dft_tile`` kernel pass."""
+    from repro.kernels.dft_tile import tile_irfft_epilogue_pallas
+    from repro.core.dft import num_freq_real
+    P = num_freq_real(spec.delta)
+    Zrt = F.z_to_flat_tiles(Zr, spec, P)    # (B, C', X, Dl, P)
+    Zit = F.z_to_flat_tiles(Zi, spec, P)
+    B, Co, X, Dl = Zrt.shape[:4]
+    n = B * Co * X * Dl
+    d = spec.delta
+    b = bias if bias is not None else jnp.zeros((Co,), Zr.dtype)
+    b_tile = jnp.broadcast_to(b.astype(Zr.dtype)[None, :, None, None],
+                              (B, Co, X, Dl)).reshape(n)
+    y = tile_irfft_epilogue_pallas(Zrt.reshape(n, P), Zit.reshape(n, P),
+                                   b_tile, activation=epilogue.activation,
+                                   delta=d, bt=bt)
+    return F.assemble_output_tiles(y.reshape(B, Co, X, Dl, d, d), spec)
+
+
 def _exec_direct(plan, x, k, bias=None, residual=None):
     y = F.conv2d_direct(x, k, padding=plan.padding,
                         compute_dtype=plan.compute_dtype)
@@ -84,8 +104,13 @@ def _fft_xla_pipeline(plan):
 
 
 def _fft_pallas_pipeline(plan):
-    inverse_fn = functools.partial(_pallas_fused_inverse, bt=plan.dft_bt) \
-        if plan.schedule == "local" else None
+    inverse_fn = None
+    if plan.schedule == "local" and plan.spectrum == "real":
+        # fused dft_tile tail for the compact layout; the full-spectrum
+        # twin takes the composed stage-4 path (it is the measurement
+        # baseline, not the fast path)
+        inverse_fn = functools.partial(_pallas_fused_inverse_real,
+                                       bt=plan.dft_bt)
     return stages.pipeline_for(plan.schedule,
                                cgemm_fn=_pallas_cgemm_fn(plan),
                                inverse_fn=inverse_fn)

@@ -288,7 +288,8 @@ def plan_network(layers: Sequence[NetworkConv], *, backend: str = "auto",
                  schedule: str = "auto", mesh=None, delta: int = 16,
                  three_m: bool = True, compute_dtype=None,
                  data_axis: str = "data", model_axis: str = "model",
-                 replicate_kernel_transform: bool = False) -> NetworkPlan:
+                 replicate_kernel_transform: bool = False,
+                 spectrum: str = "auto") -> NetworkPlan:
     """Resolve every conv layer of a model in one planning pass.
 
     All layers share the network-wide knobs given here (backend, schedule,
@@ -309,7 +310,8 @@ def plan_network(layers: Sequence[NetworkConv], *, backend: str = "auto",
     shared = dict(backend=backend, schedule=schedule, mesh=mesh, delta=delta,
                   three_m=three_m, compute_dtype=compute_dtype,
                   data_axis=data_axis, model_axis=model_axis,
-                  replicate_kernel_transform=replicate_kernel_transform)
+                  replicate_kernel_transform=replicate_kernel_transform,
+                  spectrum=spectrum)
     plans = collections.OrderedDict(
         (l.name, plan_conv(l.x_shape, l.k_shape, **l.plan_kwargs(shared)))
         for l in layers)

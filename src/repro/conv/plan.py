@@ -69,6 +69,7 @@ class ConvPlan:
     model_axis: str = "model"
     replicate_kernel_transform: bool = False
     epilogue: Epilogue = Epilogue()    # fused elementwise tail (stage 4)
+    spectrum: str = "real"             # "real" (compact Hermitian) | "complex"
 
     # ---- execution --------------------------------------------------------
     def __call__(self, x, k, *, bias=None, residual=None):
@@ -208,7 +209,8 @@ class ConvPlan:
         """Cost-model FLOPs of the planned path (for rooflines)."""
         if self.backend == "direct":
             return self.spec.direct_flops()
-        return self.spec.cgemm_flops(three_m=self.three_m) \
+        return self.spec.cgemm_flops(three_m=self.three_m,
+                                     spectrum=self.spectrum) \
             + self.spec.transform_flops()
 
     def describe(self) -> str:
@@ -217,7 +219,7 @@ class ConvPlan:
             f"ConvPlan {self.x_shape} * {self.k_shape} -> {self.out_shape}",
             f"  backend={self.backend} schedule={self.schedule} "
             f"three_m={self.three_m} delta={s.delta} "
-            f"epilogue={self.epilogue.describe()}",
+            f"spectrum={self.spectrum} epilogue={self.epilogue.describe()}",
             f"  cost-model FLOPs: direct {s.direct_flops():.3e}, fft "
             f"{s.cgemm_flops(three_m=self.three_m) + s.transform_flops():.3e}",
         ]
@@ -379,8 +381,15 @@ def _auto_backend(spec: ConvSpec, three_m: bool) -> str:
 
 def _resolve(x_shape, k_shape, padding, delta, backend, schedule, mesh,
              three_m, bm, bn, bk, dft_bt, compute_dtype, data_axis,
-             model_axis, replicate_kernel_transform, epilogue) -> ConvPlan:
+             model_axis, replicate_kernel_transform, epilogue,
+             spectrum) -> ConvPlan:
     _, _, kh, kw = k_shape
+    if spectrum == "auto":
+        spectrum = "real"    # compact Hermitian layout is the default path
+    if spectrum not in ("real", "complex"):
+        raise ValueError(
+            f"unknown spectrum {spectrum!r} (choose 'real', 'complex', or "
+            "'auto')")
     # Kernels larger than the FFT tile rule out the FFT backends but are
     # fine for direct conv: _build_spec widens the (then-unused) tile so
     # the spec validates, and auto resolves to direct below.
@@ -407,12 +416,9 @@ def _resolve(x_shape, k_shape, padding, delta, backend, schedule, mesh,
             if axis not in mesh.shape:
                 raise ValueError(
                     f"mesh has no axis {axis!r} (axes: {tuple(mesh.shape)})")
-        # The sharded impl pads channels up to model-axis multiples and
-        # slabs P over it; P divisibility must hold or execution raises.
-        if spec.P % mesh.shape[model_axis]:
-            raise ValueError(
-                f"P={spec.P} (delta={delta}) not divisible by model axis "
-                f"{mesh.shape[model_axis]}")
+        # Channel axes are zero-padded up to model-axis multiples inside
+        # the pipelines, and the frequency (P) axis is padded once before
+        # the nfft boundary all-to-alls — no divisibility precondition.
 
     # -- backend ------------------------------------------------------------
     if backend == "auto":
@@ -431,13 +437,17 @@ def _resolve(x_shape, k_shape, padding, delta, backend, schedule, mesh,
             f"backend {backend!r} cannot fuse an epilogue "
             f"({epilogue.describe()}); register it with "
             "supports_epilogue=True or use a stage-pipeline backend")
+    if spectrum == "complex" and be.pipeline_factory is None:
+        raise ValueError(
+            f"spectrum='complex' (the full-spectrum twin) only applies to "
+            f"the FFT stage pipelines; backend {backend!r} has no spectrum")
 
     return ConvPlan(spec=spec, backend=backend, schedule=schedule,
                     padding=padding, three_m=three_m, bm=bm, bn=bn, bk=bk,
                     dft_bt=dft_bt, compute_dtype=compute_dtype, mesh=mesh,
                     data_axis=data_axis, model_axis=model_axis,
                     replicate_kernel_transform=replicate_kernel_transform,
-                    epilogue=epilogue)
+                    epilogue=epilogue, spectrum=spectrum)
 
 
 def plan_conv(x_shape, k_shape, *, padding=0, delta: int = 16,
@@ -447,6 +457,7 @@ def plan_conv(x_shape, k_shape, *, padding=0, delta: int = 16,
               model_axis: str = "model",
               replicate_kernel_transform: bool = False,
               epilogue: Optional[Epilogue] = None,
+              spectrum: str = "auto",
               cache: bool = True) -> ConvPlan:
     """Create (or fetch from the plan cache) a ``ConvPlan``.
 
@@ -481,6 +492,13 @@ def plan_conv(x_shape, k_shape, *, padding=0, delta: int = 16,
         residual add) on the local output slab, before the output dtype
         cast — zero extra collectives, zero extra stage ops.  The operand
         values are execution arguments: ``plan(x, k, bias=b, residual=r)``.
+      spectrum: frequency-domain layout for the FFT pipelines.  ``"real"``
+        (the ``"auto"`` default) flows the compact Hermitian half-spectrum
+        (~0.51x the frequency points at delta=16) through every stage —
+        the nfft all-to-alls and wfft psum move roughly half the bytes;
+        ``"complex"`` is the full-spectrum twin (measurement baseline).
+        With ``backend="tuned"`` and ``spectrum="auto"`` the tuner picks
+        per geometry.
       cache: memoize the plan under its argument key (bounded LRU, see
         ``plan_cache_capacity``).
 
@@ -508,19 +526,24 @@ def plan_conv(x_shape, k_shape, *, padding=0, delta: int = 16,
                 schedule=schedule, mesh=mesh, three_m=three_m,
                 compute_dtype=compute_dtype, data_axis=data_axis,
                 model_axis=model_axis,
-                replicate_kernel_transform=replicate_kernel_transform)
+                replicate_kernel_transform=replicate_kernel_transform,
+                spectrum=spectrum)
             backend = tuned.backend
             if schedule == "auto":
                 schedule = tuned.schedule
+            if spectrum == "auto":
+                spectrum = tuned.spectrum
             # explicit caller overrides beat tuned blocks
             bm = bm if bm is not None else tuned.bm
             bn = bn if bn is not None else tuned.bn
             bk = bk if bk is not None else tuned.bk
             dft_bt = dft_bt if dft_bt is not None else tuned.dft_bt
+    if spectrum == "auto":
+        spectrum = "real"    # deterministic default — share the cache entry
     key = (x_shape, k_shape, padding, delta, backend, schedule,
            _mesh_cache_key(mesh), three_m, bm, bn, bk, dft_bt,
            compute_dtype, data_axis, model_axis,
-           replicate_kernel_transform, epilogue)
+           replicate_kernel_transform, epilogue, spectrum)
     if cache:
         with _cache_lock:
             plan = _plan_cache.get(key)
@@ -531,7 +554,7 @@ def plan_conv(x_shape, k_shape, *, padding=0, delta: int = 16,
     plan = _resolve(x_shape, k_shape, padding, delta, backend, schedule,
                     mesh, three_m, bm, bn, bk, dft_bt, compute_dtype,
                     data_axis, model_axis, replicate_kernel_transform,
-                    epilogue)
+                    epilogue, spectrum)
     if cache:
         with _cache_lock:
             _cache_misses += 1

@@ -33,18 +33,18 @@ Every pipeline exposes the prepare/execute split:
                          a prepared ``G``;
   ``full(plan, x, k)``   the one-shot path: stage 2 inline.
 
-Stage-op invocations are counted at trace time.  Prefer the thread-safe
+Every stage op takes a ``spectrum`` layout argument (see
+``repro.core.fftconv``): ``"real"`` flows the compact Hermitian
+half-spectrum (~0.51x the frequency points) through the whole graph —
+the nfft boundary all-to-alls and the wfft hot psum pair move roughly
+half the bytes of the ``"complex"`` full-spectrum twin.
+
+Stage-op invocations are counted at trace time via the thread-safe
 context manager::
 
     with stage_trace() as counts:
         jax.make_jaxpr(plan)(x, k)
     assert counts["cgemm"] == 1
-
-``stage_counts()`` / ``reset_stage_counts()`` remain as *deprecated*
-shims over a process-global counter (lock-guarded): they are not
-thread-safe to use (any concurrent trace bleeds into the shared counter)
-and emit a ``DeprecationWarning`` pointing at ``stage_trace()`` / the
-``repro.conv.analyze`` profiler.
 
 Traces also record dtype facts as ``("cgemm_dtype", <dtype>)`` tuple keys
 alongside the plain string op counts — the static analyzer reads these to
@@ -56,7 +56,6 @@ import collections
 import contextlib
 import functools
 import threading
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -73,14 +72,10 @@ from repro.conv.epilogue import Epilogue, apply_epilogue
 # Stage-op trace counters (thread-safe, context-managed)
 # --------------------------------------------------------------------------
 
-_trace_lock = threading.Lock()
-_global_counts: collections.Counter = collections.Counter()
 _tls = threading.local()                 # per-thread stack of active traces
 
 
 def _count(name: str) -> None:
-    with _trace_lock:
-        _global_counts[name] += 1
     for counter in getattr(_tls, "stack", ()):
         counter[name] += 1
 
@@ -90,8 +85,7 @@ def stage_trace():
     """Scoped, thread-local stage-op counter.
 
     Counts only the stage ops traced by *this* thread while the context is
-    active, so concurrent planners/tracers don't bleed into each other
-    (the module-global counter behind ``stage_counts()`` is shared).
+    active, so concurrent planners/tracers don't bleed into each other.
     Nested traces each observe the ops traced inside them.
     """
     counts: collections.Counter = collections.Counter()
@@ -111,44 +105,18 @@ def stage_trace():
                 break
 
 
-def stage_counts() -> dict:
-    """Deprecated: process-global trace-time invocation counts per stage
-    op.  The module-global counter is shared across threads (concurrent
-    planners/tracers bleed into each other); use the scoped
-    ``stage_trace()`` context manager, or ``repro.conv.analyze`` for
-    structured per-plan profiles."""
-    warnings.warn(
-        "stage_counts() reads a thread-unsafe module-global counter; use "
-        "the stage_trace() context manager or repro.conv.analyze instead",
-        DeprecationWarning, stacklevel=2)
-    with _trace_lock:
-        return dict(_global_counts)
-
-
-def reset_stage_counts() -> None:
-    """Deprecated: clears the module-global counter behind
-    ``stage_counts()`` — see that function's deprecation note."""
-    warnings.warn(
-        "reset_stage_counts() mutates a thread-unsafe module-global "
-        "counter; use the stage_trace() context manager or "
-        "repro.conv.analyze instead",
-        DeprecationWarning, stacklevel=2)
-    with _trace_lock:
-        _global_counts.clear()
-
-
 # --------------------------------------------------------------------------
 # Stage ops (counted)
 # --------------------------------------------------------------------------
 
-def stage_input_transform(x, spec: ConvSpec):
+def stage_input_transform(x, spec: ConvSpec, spectrum: str = "rect"):
     _count("input_transform")
-    return F.input_transform(x, spec)
+    return F.input_transform(x, spec, spectrum=spectrum)
 
 
-def stage_kernel_transform(k, spec: ConvSpec):
+def stage_kernel_transform(k, spec: ConvSpec, spectrum: str = "rect"):
     _count("kernel_transform")
-    return F.kernel_transform(k, spec)
+    return F.kernel_transform(k, spec, spectrum=spectrum)
 
 
 def stage_cgemm(Dr, Di, Gr, Gi, *, three_m: bool, cgemm_fn=None):
@@ -162,21 +130,22 @@ def stage_cgemm(Dr, Di, Gr, Gi, *, three_m: bool, cgemm_fn=None):
 
 
 def stage_output_inverse(Zr, Zi, spec: ConvSpec, *, epilogue: Epilogue = None,
-                         bias=None, residual=None, inverse_fn=None):
+                         bias=None, residual=None, inverse_fn=None,
+                         spectrum: str = "rect"):
     """Stage 4 with the fused elementwise epilogue.
 
     The epilogue rides inside this single stage op (the counter increments
     once, fused or not).  ``inverse_fn`` is a backend-supplied fused
     inverse+epilogue kernel ``(Zr, Zi, spec, epilogue, bias) -> y`` (the
-    Pallas ``dft_tile`` tail); it cannot fold a residual — the residual
-    lives in output layout, not tile layout — so residual epilogues fall
-    back to the composed path.
+    Pallas ``dft_tile`` tail) matched to the plan's spectrum layout; it
+    cannot fold a residual — the residual lives in output layout, not tile
+    layout — so residual epilogues fall back to the composed path.
     """
     _count("output_inverse")
     if (inverse_fn is not None and epilogue is not None
             and not epilogue.is_noop and not epilogue.residual):
         return inverse_fn(Zr, Zi, spec, epilogue, bias)
-    y = F.output_inverse(Zr, Zi, spec)
+    y = F.output_inverse(Zr, Zi, spec, spectrum=spectrum)
     return apply_epilogue(y, epilogue, bias=bias, residual=residual)
 
 
@@ -270,11 +239,11 @@ class LocalPipeline:
         self.inverse_fn = inverse_fn
 
     def prepare(self, plan, k):
-        return stage_kernel_transform(k, plan.spec)
+        return stage_kernel_transform(k, plan.spec, plan.spectrum)
 
     def execute(self, plan, x, G, bias=None, residual=None):
         spec = plan.spec
-        Dr, Di = stage_input_transform(x, spec)
+        Dr, Di = stage_input_transform(x, spec, plan.spectrum)
         Gr, Gi = G
         Dr, Di = _maybe_cast((Dr, Di), plan.compute_dtype)
         Gr, Gi = _maybe_cast((Gr, Gi), plan.compute_dtype)
@@ -283,7 +252,8 @@ class LocalPipeline:
         Zr, Zi = Zr.astype(jnp.float32), Zi.astype(jnp.float32)
         y = stage_output_inverse(Zr, Zi, spec, epilogue=plan.epilogue,
                                  bias=bias, residual=residual,
-                                 inverse_fn=self.inverse_fn)
+                                 inverse_fn=self.inverse_fn,
+                                 spectrum=plan.spectrum)
         return y.astype(x.dtype)
 
     def full(self, plan, x, k, bias=None, residual=None):
@@ -325,7 +295,12 @@ class NfftPipeline:
     def _stage1_and_boundary1(self, x, plan, spec):
         b_loc, c_loc = x.shape[0], x.shape[1]
         sp1 = _local_spec(spec, b_loc, c_loc, spec.Cout)
-        Dr, Di = stage_input_transform(x, sp1)
+        Dr, Di = stage_input_transform(x, sp1, plan.spectrum)
+        # The tiled all-to-all splits the P axis N ways: pad the frequency
+        # list up to a model-axis multiple ONCE here (padded rows are zero,
+        # flow inertly through the CGEMM, and stage 4 slices them off).
+        n_model = plan.mesh.shape[plan.model_axis]
+        Dr, Di = _pad_axis(Dr, 0, n_model), _pad_axis(Di, 0, n_model)
         if plan.compute_dtype is not None:
             # cast BEFORE the boundary a2a so the collective moves half the
             # bytes
@@ -335,19 +310,20 @@ class NfftPipeline:
 
     def _stage2(self, k, plan, spec, n_model):
         c_full = k.shape[1]
+        sp2 = _local_spec(spec, spec.B, c_full, k.shape[0])
         if plan.replicate_kernel_transform:
             # Stage 2': full kernel transform on every rank, local P-slab
             # slice — removes boundary a2a #2 (beyond-paper optimization).
-            sp2 = _local_spec(spec, spec.B, c_full, k.shape[0])
-            Gr, Gi = stage_kernel_transform(k, sp2)   # (P, C, C'_full)
-            p_loc = spec.P // n_model
+            Gr, Gi = stage_kernel_transform(k, sp2, plan.spectrum)
+            Gr, Gi = _pad_axis(Gr, 0, n_model), _pad_axis(Gi, 0, n_model)
+            p_loc = Gr.shape[0] // n_model
             idx = jax.lax.axis_index(plan.model_axis) * p_loc
             Gr = jax.lax.dynamic_slice_in_dim(Gr, idx, p_loc, axis=0)
             Gi = jax.lax.dynamic_slice_in_dim(Gi, idx, p_loc, axis=0)
             return Gr, Gi
         # Stage 2: transform the local C'_loc kernels -> G (P, C, C'_loc)
-        sp2 = _local_spec(spec, spec.B, c_full, k.shape[0])
-        Gr, Gi = stage_kernel_transform(k, sp2)
+        Gr, Gi = stage_kernel_transform(k, sp2, plan.spectrum)
+        Gr, Gi = _pad_axis(Gr, 0, n_model), _pad_axis(Gi, 0, n_model)
         # Boundary a2a #2: (P, C, C'_loc) -> (P/N, C, C')
         return _boundary_a2a(Gr, Gi, plan.model_axis, 0, 2)
 
@@ -369,16 +345,23 @@ class NfftPipeline:
         bias, residual = _unpack_epilogue_args(plan, ep_args)
         sp4 = _local_spec(spec, b_loc, c_full, spec.Cout // n_model)
         return stage_output_inverse(Zr, Zi, sp4, epilogue=plan.epilogue,
-                                    bias=bias, residual=residual)
+                                    bias=bias, residual=residual,
+                                    spectrum=plan.spectrum)
 
     # ---- global entry points ----------------------------------------------
 
     def prepare(self, plan, k):
-        """Stage 2 (+ its boundary movement), once: global (P, C, C')."""
+        """Stage 2 (+ its boundary movement), once: global (P, C, C').
+
+        The P axis is padded up to a model-axis multiple so the prepared
+        slab enters shard_map P-sharded (matching the post-boundary layout
+        the a2a padding produces on the inline path).
+        """
         spec = padded_sharded_spec(plan)
         n_model = plan.mesh.shape[plan.model_axis]
         kp = _pad_axis(_pad_axis(k, 0, n_model), 1, n_model)
-        return stage_kernel_transform(kp, spec)
+        Gr, Gi = stage_kernel_transform(kp, spec, plan.spectrum)
+        return _pad_axis(Gr, 0, n_model), _pad_axis(Gi, 0, n_model)
 
     def execute(self, plan, x, G, bias=None, residual=None):
         spec = padded_sharded_spec(plan)
@@ -438,7 +421,7 @@ class WfftPipeline:
         b_loc, c_loc = x.shape[0], x.shape[1]
         co_full = spec.Cout
         sp1 = _local_spec(spec, b_loc, c_loc, co_full)
-        Dr, Di = stage_input_transform(x, sp1)        # (P, M_loc, C_loc)
+        Dr, Di = stage_input_transform(x, sp1, plan.spectrum)  # (P, M, C_loc)
         Dr, Di = _maybe_cast((Dr, Di), plan.compute_dtype)
         Gr, Gi = _maybe_cast((Gr, Gi), plan.compute_dtype)
         Zr, Zi = stage_cgemm(Dr, Di, Gr, Gi, three_m=plan.three_m,
@@ -461,12 +444,13 @@ class WfftPipeline:
         bias, residual = _unpack_epilogue_args(plan, ep_args)
         sp4 = _local_spec(spec, b_loc, c_loc, co_loc)
         return stage_output_inverse(Zr, Zi, sp4, epilogue=plan.epilogue,
-                                    bias=bias, residual=residual)
+                                    bias=bias, residual=residual,
+                                    spectrum=plan.spectrum)
 
     def _body_full(self, x, k, *ep_args, plan, spec, n_model):
         """k: (C'_full, C_loc, kh, kw) — stage 2 inline on the local slab."""
         sp2 = _local_spec(spec, x.shape[0], k.shape[1], k.shape[0])
-        Gr, Gi = stage_kernel_transform(k, sp2)       # (P, C_loc, C'_full)
+        Gr, Gi = stage_kernel_transform(k, sp2, plan.spectrum)
         return self._body(x, Gr, Gi, *ep_args, plan=plan, spec=spec,
                           n_model=n_model)
 
@@ -474,7 +458,7 @@ class WfftPipeline:
         spec = padded_sharded_spec(plan)
         n_model = plan.mesh.shape[plan.model_axis]
         kp = _pad_axis(_pad_axis(k, 0, n_model), 1, n_model)
-        return stage_kernel_transform(kp, spec)
+        return stage_kernel_transform(kp, spec, plan.spectrum)
 
     def _run(self, plan, x, args, body, extra_in_specs):
         mesh = plan.mesh

@@ -78,13 +78,27 @@ class ConvSpec:
     def Wp(self) -> int:
         return (self.D - 1) * self.t_w + self.delta
 
+    def freq_points(self, spectrum: str = "rect") -> int:
+        """Stored frequency points for a spectrum layout (see
+        ``repro.core.fftconv``): the rect rfft2 grid (``P``), the compact
+        Hermitian list (``"real"``), or the full spectrum (``"complex"``)."""
+        if spectrum == "rect":
+            return self.P
+        if spectrum == "complex":
+            return self.delta * self.delta
+        if spectrum == "real":
+            d = self.delta
+            return d * d // 2 + 2 if d % 2 == 0 else (d * d + 1) // 2
+        raise ValueError(f"unknown spectrum {spectrum!r}")
+
     # ---- cost model (for roofline / napkin math) --------------------------
     def direct_flops(self) -> int:
         return 2 * self.B * self.Cout * self.C * self.Ho * self.Wo * self.kh * self.kw
 
-    def cgemm_flops(self, three_m: bool = False) -> int:
+    def cgemm_flops(self, three_m: bool = False,
+                    spectrum: str = "rect") -> int:
         per_point = (6 if three_m else 8) * self.M * self.C * self.Cout
-        return self.P * per_point
+        return self.freq_points(spectrum) * per_point
 
     def transform_flops(self) -> int:
         # input + kernel + inverse transforms, 6 small matmuls each ~2*d^3-ish

@@ -34,8 +34,12 @@ def _dft_mats_np(delta: int):
     # Inverse full DFT (axis 0): Finv[h, u] = exp(+2i pi u h / delta) / delta
     Finv = np.conj(F).T / delta
     # Weighted inverse-rfft (last axis): x[., w] = Re(sum_v c_v Y[., v] e^{2i pi v w/delta})/delta
+    # Fold weight 1 only for self-conjugate bins: DC always, Nyquist only
+    # when delta is even (odd delta has no Nyquist bin — v == delta//2 there
+    # still has a dropped conjugate partner and needs weight 2).
     v = np.arange(dh)
-    c = np.where((v == 0) | (v == delta // 2), 1.0, 2.0)
+    self_conj = (v == 0) | ((delta % 2 == 0) & (v == delta // 2))
+    c = np.where(self_conj, 1.0, 2.0)
     angw = 2.0 * np.pi * np.outer(np.arange(delta), v) / delta
     W = (np.cos(angw) + 1j * np.sin(angw)) * c[None, :] / delta   # (delta, dh)
     return (
@@ -79,3 +83,110 @@ def irfft2_tiles(Zr, Zi, delta: int):
 def num_freq(delta: int) -> int:
     """Number of stored complex frequency points P in the rfft2 layout."""
     return delta * (delta // 2 + 1)
+
+
+def num_freq_full(delta: int) -> int:
+    """Frequency points in the full complex spectrum (``spectrum="complex"``)."""
+    return delta * delta
+
+
+def num_freq_real(delta: int) -> int:
+    """Frequency points in the compact Hermitian layout (``spectrum="real"``).
+
+    The rect rfft2 layout (delta x delta_h) still stores u-redundant rows in
+    its self-conjugate columns (v = 0, and v = delta/2 for even delta):
+    T[u, v] = conj(T[delta-u, v]) there.  Dropping them leaves
+    delta^2/2 + 2 points for even delta and (delta^2 + 1)/2 for odd — just
+    over half the full spectrum, vs 0.5625x for the rect layout at delta=16.
+    """
+    return len(_compact_layout_np(delta)[0])
+
+
+@functools.lru_cache(maxsize=None)
+def _compact_layout_np(delta: int):
+    """Gather/scatter index maps between the rect rfft2 layout and the
+    compact Hermitian frequency list.
+
+    Returns ``(store, src, sgn)`` numpy arrays:
+
+    - ``store`` (P_real,) int32: flat rect indices (u * delta_h + v) kept in
+      the compact layout, in stored order.
+    - ``src``   (delta * delta_h,) int32: for every rect point, the compact
+      index holding its value (its own slot, or its u-conjugate mirror
+      ``(delta - u) % delta`` for dropped points).
+    - ``sgn``   (delta * delta_h,) float32: +1 for stored points, -1 for
+      dropped ones (imag plane is negated when reading through the mirror).
+    """
+    d = delta
+    dh = d // 2 + 1
+    keep = np.ones((d, dh), dtype=bool)
+    # Self-conjugate columns: only u in [0, d//2] carries information.
+    keep[d // 2 + 1:, 0] = False
+    if d % 2 == 0:
+        keep[d // 2 + 1:, d // 2] = False
+    store = np.flatnonzero(keep.ravel())
+    comp_of_rect = -np.ones(d * dh, dtype=np.int64)
+    comp_of_rect[store] = np.arange(store.size)
+    src = np.empty(d * dh, dtype=np.int64)
+    sgn = np.empty(d * dh, dtype=np.float32)
+    for u in range(d):
+        for v in range(dh):
+            r = u * dh + v
+            if comp_of_rect[r] >= 0:
+                src[r], sgn[r] = comp_of_rect[r], 1.0
+            else:
+                m = ((d - u) % d) * dh + v
+                src[r], sgn[r] = comp_of_rect[m], -1.0
+    return (store.astype(np.int32), src.astype(np.int32), sgn)
+
+
+def compact_layout(delta: int):
+    """jnp copies of the (store, src, sgn) compact-layout index maps."""
+    store, src, sgn = _compact_layout_np(delta)
+    return jnp.asarray(store), jnp.asarray(src), jnp.asarray(sgn)
+
+
+def pack_half_spectrum(Tr, Ti, delta: int):
+    """Rect rfft2 planes (..., delta, delta_h) -> compact (..., P_real)."""
+    store, _, _ = compact_layout(delta)
+    dh = delta // 2 + 1
+    Tr = jnp.take(Tr.reshape(*Tr.shape[:-2], delta * dh), store, axis=-1)
+    Ti = jnp.take(Ti.reshape(*Ti.shape[:-2], delta * dh), store, axis=-1)
+    return Tr, Ti
+
+
+def unpack_half_spectrum(Zr, Zi, delta: int):
+    """Compact planes (..., P >= P_real) -> rect rfft2 (..., delta, delta_h).
+
+    Trailing padding past P_real (e.g. all-to-all divisibility padding) is
+    ignored: every ``src`` index points below P_real.
+    """
+    _, src, sgn = compact_layout(delta)
+    dh = delta // 2 + 1
+    shape = (*Zr.shape[:-1], delta, dh)
+    Zr = jnp.take(Zr, src, axis=-1).reshape(shape)
+    Zi = (jnp.take(Zi, src, axis=-1) * sgn.astype(Zi.dtype)).reshape(shape)
+    return Zr, Zi
+
+
+def fft2_full_tiles(x, delta: int):
+    """Batched full fft2 of real tiles: (..., delta, delta) -> two
+    (..., delta, delta) planes (the ``spectrum="complex"`` twin)."""
+    Fr, Fi, *_ = dft_mats(delta)
+    Ar = jnp.einsum("uh,...hw->...uw", Fr, x)
+    Ai = jnp.einsum("uh,...hw->...uw", Fi, x)
+    Tr = jnp.einsum("...uw,vw->...uv", Ar, Fr) - jnp.einsum("...uw,vw->...uv", Ai, Fi)
+    Ti = jnp.einsum("...uw,vw->...uv", Ar, Fi) + jnp.einsum("...uw,vw->...uv", Ai, Fr)
+    return Tr, Ti
+
+
+def ifft2_full_tiles(Zr, Zi, delta: int):
+    """Batched full ifft2: two (..., delta, delta) planes -> real tiles.
+
+    Returns Re(Finv @ Z @ Finv^T); the imaginary part cancels for spectra of
+    real signals.
+    """
+    _, _, _, _, Fvr, Fvi, _, _ = dft_mats(delta)
+    Yr = jnp.einsum("hu,...uv->...hv", Fvr, Zr) - jnp.einsum("hu,...uv->...hv", Fvi, Zi)
+    Yi = jnp.einsum("hu,...uv->...hv", Fvr, Zi) + jnp.einsum("hu,...uv->...hv", Fvi, Zr)
+    return jnp.einsum("...hv,wv->...hw", Yr, Fvr) - jnp.einsum("...hv,wv->...hw", Yi, Fvi)

@@ -23,7 +23,42 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.conv_spec import ConvSpec
-from repro.core.dft import rfft2_tiles, irfft2_tiles
+from repro.core import dft
+from repro.core.dft import (
+    rfft2_tiles, irfft2_tiles, fft2_full_tiles, ifft2_full_tiles,
+    pack_half_spectrum, unpack_half_spectrum,
+)
+
+
+# --------------------------------------------------------------------------
+# Spectrum layouts
+# --------------------------------------------------------------------------
+#
+# Three frequency-axis layouts share the (P, M, C)-shaped stage interface:
+#
+#   "rect"    P = delta * (delta//2 + 1)  — the historical rfft2 grid; still
+#             carries u-redundant rows in its self-conjugate columns
+#             (0.5625x the full spectrum at delta=16).
+#   "real"    P = num_freq_real(delta)    — compact Hermitian frequency list
+#             (~0.51x at delta=16); the ConvPlan default.
+#   "complex" P = delta^2                 — full spectrum; the measurement
+#             twin the analyze invariants compare collective bytes against.
+#
+# Plans only use "real"/"complex"; "rect" remains the no-argument default of
+# the raw stage primitives for direct callers.
+
+SPECTRA = ("real", "complex")
+
+
+def freq_count(spec: ConvSpec, spectrum: str = "rect") -> int:
+    """Stored frequency points P for a spectrum layout."""
+    if spectrum == "rect":
+        return spec.P
+    if spectrum == "real":
+        return dft.num_freq_real(spec.delta)
+    if spectrum == "complex":
+        return dft.num_freq_full(spec.delta)
+    raise ValueError(f"unknown spectrum {spectrum!r}")
 
 
 # --------------------------------------------------------------------------
@@ -70,13 +105,30 @@ def extract_tiles(x, spec: ConvSpec):
     return patches.transpose(0, 1, 2, 4, 3, 5)
 
 
-def input_transform(x, spec: ConvSpec, *, dtype=jnp.float32):
+def _tiles_to_spectrum(tiles, spec: ConvSpec, spectrum: str):
+    """Real tile batch (..., delta, delta) -> flat spectrum planes (..., P)."""
+    if spectrum == "complex":
+        Tr, Ti = fft2_full_tiles(tiles, spec.delta)
+        P = spec.delta * spec.delta
+        return Tr.reshape(*Tr.shape[:-2], P), Ti.reshape(*Ti.shape[:-2], P)
+    Tr, Ti = rfft2_tiles(tiles, spec.delta)
+    if spectrum == "real":
+        return pack_half_spectrum(Tr, Ti, spec.delta)
+    if spectrum == "rect":
+        P = spec.P
+        return Tr.reshape(*Tr.shape[:-2], P), Ti.reshape(*Ti.shape[:-2], P)
+    raise ValueError(f"unknown spectrum {spectrum!r}")
+
+
+def input_transform(x, spec: ConvSpec, *, dtype=jnp.float32,
+                    spectrum: str = "rect"):
     """Stage 1: I -> D (P, M, C) as (real, imag)."""
-    patches = extract_tiles(x.astype(dtype), spec)
-    Tr, Ti = rfft2_tiles(patches, spec.delta)          # (B, C, X, Dl, d, dh)
-    def to_pmc(T):
-        T = T.transpose(4, 5, 0, 2, 3, 1)              # (d, dh, B, X, Dl, C)
-        return T.reshape(spec.P, spec.M, spec.C)
+    patches = extract_tiles(x.astype(dtype), spec)     # (B, C, X, Dl, d, d)
+    Tr, Ti = _tiles_to_spectrum(patches, spec, spectrum)
+    P = Tr.shape[-1]                                   # == freq_count(...)
+    def to_pmc(T):                                     # (B, C, X, Dl, P)
+        T = T.transpose(4, 0, 2, 3, 1)                 # (P, B, X, Dl, C)
+        return T.reshape(P, spec.M, spec.C)
     return to_pmc(Tr), to_pmc(Ti)
 
 
@@ -84,14 +136,16 @@ def input_transform(x, spec: ConvSpec, *, dtype=jnp.float32):
 # Stage 2: kernel transform
 # --------------------------------------------------------------------------
 
-def kernel_transform(k, spec: ConvSpec, *, dtype=jnp.float32):
+def kernel_transform(k, spec: ConvSpec, *, dtype=jnp.float32,
+                     spectrum: str = "rect"):
     """Stage 2: K -> G (P, C, C') as (real, imag); imag is conjugated."""
     d = spec.delta
     kp = jnp.pad(k.astype(dtype), ((0, 0), (0, 0),
                                    (0, d - spec.kh), (0, d - spec.kw)))
-    Tr, Ti = rfft2_tiles(kp, d)                        # (C', C, d, dh)
+    Tr, Ti = _tiles_to_spectrum(kp, spec, spectrum)    # (C', C, P)
+    P = Tr.shape[-1]                                   # == freq_count(...)
     def to_pcc(T):
-        return T.transpose(2, 3, 1, 0).reshape(spec.P, spec.C, spec.Cout)
+        return T.transpose(2, 1, 0).reshape(P, spec.C, spec.Cout)
     return to_pcc(Tr), to_pcc(-Ti)                     # conj: F*(K)
 
 
@@ -106,6 +160,16 @@ def z_to_tiles(Z, spec: ConvSpec):
     return Z.transpose(2, 5, 3, 4, 0, 1)               # (B, C', X, Dl, d, dh)
 
 
+def z_to_flat_tiles(Z, spec: ConvSpec, P: int):
+    """(P', M, C') flat frequency layout -> per-tile (B, C', X, Dl, P).
+
+    ``P`` is the layout's true point count; rows past it (all-to-all
+    divisibility padding added by the nfft schedule) are dropped.
+    """
+    Z = Z[:P].reshape(P, spec.B, spec.X, spec.D, spec.Cout)
+    return Z.transpose(1, 4, 2, 3, 0)                  # (B, C', X, Dl, P)
+
+
 def assemble_output_tiles(y, spec: ConvSpec):
     """Inverse-transformed tiles (B, C', X, Dl, d, d) -> O (B, C', Ho, Wo)
     (overlap-save crop + spatial reassembly)."""
@@ -115,9 +179,28 @@ def assemble_output_tiles(y, spec: ConvSpec):
     return y[:, :, :spec.Ho, :spec.Wo]
 
 
-def output_inverse(Zr, Zi, spec: ConvSpec):
-    """Stage 4: Z (P, M, C') -> O (B, C', Ho, Wo)."""
-    y = irfft2_tiles(z_to_tiles(Zr, spec), z_to_tiles(Zi, spec), spec.delta)
+def output_inverse(Zr, Zi, spec: ConvSpec, *, spectrum: str = "rect"):
+    """Stage 4: Z (P, M, C') -> O (B, C', Ho, Wo).
+
+    The P axis may carry trailing padding past the layout's point count
+    (nfft all-to-all divisibility); it is sliced off here.
+    """
+    d = spec.delta
+    if spectrum == "rect":
+        y = irfft2_tiles(z_to_tiles(Zr[:spec.P], spec),
+                         z_to_tiles(Zi[:spec.P], spec), d)
+    elif spectrum == "real":
+        P = dft.num_freq_real(d)
+        Zr, Zi = unpack_half_spectrum(z_to_flat_tiles(Zr, spec, P),
+                                      z_to_flat_tiles(Zi, spec, P), d)
+        y = irfft2_tiles(Zr, Zi, d)
+    elif spectrum == "complex":
+        P = d * d
+        shape = (spec.B, spec.Cout, spec.X, spec.D, d, d)
+        y = ifft2_full_tiles(z_to_flat_tiles(Zr, spec, P).reshape(shape),
+                             z_to_flat_tiles(Zi, spec, P).reshape(shape), d)
+    else:
+        raise ValueError(f"unknown spectrum {spectrum!r}")
     return assemble_output_tiles(y, spec)
 
 

@@ -50,18 +50,36 @@ def default_blocks(M, N, C):
     return _default_blocks(M, N, C)
 
 
+_LANE = 8                                 # sublane-friendly block alignment
+
+
+def _shrink_block(dim, block):
+    """Shrink a heuristic default block to fit ``dim`` with at most one
+    lane-alignment's padding, keeping the grid-step count the full-size
+    block would need.  A 100-wide dim under a 128 default becomes 104
+    (one 8-aligned step) instead of zero-padding 28 ghost columns; odd
+    half-spectrum slabs (e.g. P_real=130 rows of M) stop re-padding at
+    every stage that touches them."""
+    steps = max(1, -(-dim // block))
+    fitted = -(-dim // steps)             # ceil: balanced across steps
+    fitted = -(-fitted // _LANE) * _LANE  # align up to the lane width
+    return min(block, fitted)
+
+
 def resolve_blocks(M, N, C, bm=None, bn=None, bk=None):
     """Merge explicit block overrides over the heuristic defaults.
 
-    ``None`` means "use the default"; explicit values must be positive
-    ints (operands are zero-padded up to block multiples, so any positive
-    edge is legal — the autotuner decides what's *fast*).
+    ``None`` means "use the default", shrunk to fit the dim (see
+    ``_shrink_block`` — padding is applied once, not per stage); explicit
+    values are honored verbatim and must be positive ints (operands are
+    zero-padded up to block multiples, so any positive edge is legal —
+    the autotuner decides what's *fast*).
     """
     resolved = []
-    for name, v, d in zip(("bm", "bn", "bk"), (bm, bn, bk),
-                          _default_blocks(M, N, C)):
+    for name, v, dim, d in zip(("bm", "bn", "bk"), (bm, bn, bk), (M, N, C),
+                               _default_blocks(M, N, C)):
         if v is None:
-            v = d
+            v = _shrink_block(dim, d)
         if isinstance(v, bool) or not isinstance(v, int) or v <= 0:
             raise ValueError(
                 f"cgemm block override {name} must be a positive int or "

@@ -1,9 +1,14 @@
 from repro.kernels.dft_tile.ops import (
     tile_fft_pallas, tile_ifft_pallas, tile_ifft_epilogue_pallas,
+    tile_rfft_pallas, tile_irfft_pallas, tile_irfft_epilogue_pallas,
     resolve_bt, DEFAULT_BT,
 )
-from repro.kernels.dft_tile.ref import tile_fft_ref, tile_ifft_ref
+from repro.kernels.dft_tile.ref import (
+    tile_fft_ref, tile_ifft_ref, tile_rfft_ref, tile_irfft_ref,
+)
 
 __all__ = ["tile_fft_pallas", "tile_ifft_pallas",
-           "tile_ifft_epilogue_pallas", "tile_fft_ref", "tile_ifft_ref",
-           "resolve_bt", "DEFAULT_BT"]
+           "tile_ifft_epilogue_pallas", "tile_rfft_pallas",
+           "tile_irfft_pallas", "tile_irfft_epilogue_pallas",
+           "tile_fft_ref", "tile_ifft_ref", "tile_rfft_ref",
+           "tile_irfft_ref", "resolve_bt", "DEFAULT_BT"]

@@ -37,6 +37,69 @@ def _fwd_kernel(x_ref, fr_ref, fi_ref, fhr_ref, fhi_ref, tr_ref, ti_ref):
     ti_ref[...] = ti.astype(ti_ref.dtype)
 
 
+def _rfwd_kernel(x_ref, fr_ref, fi_ref, fhr_ref, fhi_ref, store_ref,
+                 tr_ref, ti_ref):
+    """Forward tile DFT + compact-Hermitian gather in one VMEM pass.
+
+    The rect rfft2 result (bt, d, dh) never reaches HBM: the kernel gathers
+    the ``store`` frequency list (see ``repro.core.dft.compact_layout``)
+    while the block is VMEM-resident, emitting (bt, P) flat planes.
+    """
+    x = x_ref[...]                       # (bt, d, d) real
+    fr, fi = fr_ref[...], fi_ref[...]
+    fhr, fhi = fhr_ref[...], fhi_ref[...]
+    store = store_ref[...][0]            # (1, P) -> (P,)
+    ar = jnp.einsum("uh,nhw->nuw", fr, x, preferred_element_type=jnp.float32)
+    ai = jnp.einsum("uh,nhw->nuw", fi, x, preferred_element_type=jnp.float32)
+    tr = jnp.einsum("nuw,vw->nuv", ar, fhr,
+                    preferred_element_type=jnp.float32) \
+        - jnp.einsum("nuw,vw->nuv", ai, fhi,
+                     preferred_element_type=jnp.float32)
+    ti = jnp.einsum("nuw,vw->nuv", ar, fhi,
+                    preferred_element_type=jnp.float32) \
+        + jnp.einsum("nuw,vw->nuv", ai, fhr,
+                     preferred_element_type=jnp.float32)
+    bt = tr.shape[0]
+    tr_ref[...] = jnp.take(tr.reshape(bt, -1), store,
+                           axis=1).astype(tr_ref.dtype)
+    ti_ref[...] = jnp.take(ti.reshape(bt, -1), store,
+                           axis=1).astype(ti_ref.dtype)
+
+
+def _scatter_to_rect(zr, zi, src, sgn, delta):
+    """Compact flat planes (bt, P) -> rect (bt, d, dh) via the conj-mirror
+    scatter: dropped points read their mirror with the imag plane negated."""
+    bt, dh = zr.shape[0], delta // 2 + 1
+    zr_rect = jnp.take(zr, src, axis=1).reshape(bt, delta, dh)
+    zi_rect = (jnp.take(zi, src, axis=1)
+               * sgn.astype(zi.dtype)).reshape(bt, delta, dh)
+    return zr_rect, zi_rect
+
+
+def _rinv_kernel(zr_ref, zi_ref, fvr_ref, fvi_ref, wr_ref, wi_ref,
+                 src_ref, sgn_ref, y_ref, *, delta):
+    zr, zi = _scatter_to_rect(zr_ref[...], zi_ref[...], src_ref[...][0],
+                              sgn_ref[...][0], delta)
+    y = _inverse_block(zr, zi, fvr_ref[...], fvi_ref[...],
+                       wr_ref[...], wi_ref[...])
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+def _rinv_epilogue_kernel(zr_ref, zi_ref, fvr_ref, fvi_ref, wr_ref, wi_ref,
+                          src_ref, sgn_ref, b_ref, y_ref, *, delta,
+                          activation):
+    """Compact-layout scatter + inverse tile DFT + bias/activation tail,
+    all on the VMEM-resident block (the ``spectrum="real"`` stage-4 fast
+    path)."""
+    zr, zi = _scatter_to_rect(zr_ref[...], zi_ref[...], src_ref[...][0],
+                              sgn_ref[...][0], delta)
+    y = _inverse_block(zr, zi, fvr_ref[...], fvi_ref[...],
+                       wr_ref[...], wi_ref[...])
+    y = y + b_ref[...][:, :, None]
+    y = _TAIL_ACTIVATIONS[activation](y)
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
 def _inverse_block(zr, zi, fvr, fvi, wr, wi):
     """The shared inverse-DFT math: Z (bt, d, dh) -> y (bt, d, d) real.
     ``_inv_kernel`` and ``_inv_epilogue_kernel`` differ only in the tail
@@ -123,6 +186,78 @@ def tile_ifft_call(n: int, delta: int, dtype, *, bt: int,
         in_specs=[z_spec, z_spec, _mat_spec((delta, delta)),
                   _mat_spec((delta, delta)), _mat_spec((delta, dh)),
                   _mat_spec((delta, dh))],
+        out_specs=y_spec,
+        out_shape=jax.ShapeDtypeStruct((n, delta, delta), dtype),
+        interpret=interpret,
+    )
+
+
+def tile_rfft_call(n: int, delta: int, P: int, dtype, *, bt: int,
+                   interpret: bool = False):
+    """Forward tile DFT + compact gather: (n, delta, delta) -> 2x (n, P)."""
+    assert n % bt == 0
+    dh = delta // 2 + 1
+    x_spec = pl.BlockSpec((bt, delta, delta), lambda i: (i, 0, 0))
+    t_spec = pl.BlockSpec((bt, P), lambda i: (i, 0))
+    return pl.pallas_call(
+        _rfwd_kernel,
+        grid=(n // bt,),
+        in_specs=[x_spec, _mat_spec((delta, delta)), _mat_spec((delta, delta)),
+                  _mat_spec((dh, delta)), _mat_spec((dh, delta)),
+                  _mat_spec((1, P))],
+        out_specs=[t_spec, t_spec],
+        out_shape=[jax.ShapeDtypeStruct((n, P), dtype)] * 2,
+        interpret=interpret,
+    )
+
+
+def tile_irfft_call(n: int, delta: int, P: int, dtype, *, bt: int,
+                    interpret: bool = False):
+    """Compact-layout inverse tile DFT: 2x (n, P) -> (n, delta, delta).
+
+    ``P`` may exceed the layout's true point count (all-to-all padding);
+    every scatter index points below it, so trailing rows are ignored.
+    """
+    assert n % bt == 0
+    dh = delta // 2 + 1
+    z_spec = pl.BlockSpec((bt, P), lambda i: (i, 0))
+    y_spec = pl.BlockSpec((bt, delta, delta), lambda i: (i, 0, 0))
+    rect = delta * dh
+    return pl.pallas_call(
+        functools.partial(_rinv_kernel, delta=delta),
+        grid=(n // bt,),
+        in_specs=[z_spec, z_spec, _mat_spec((delta, delta)),
+                  _mat_spec((delta, delta)), _mat_spec((delta, dh)),
+                  _mat_spec((delta, dh)), _mat_spec((1, rect)),
+                  _mat_spec((1, rect))],
+        out_specs=y_spec,
+        out_shape=jax.ShapeDtypeStruct((n, delta, delta), dtype),
+        interpret=interpret,
+    )
+
+
+def tile_irfft_epilogue_call(n: int, delta: int, P: int, dtype, *, bt: int,
+                             activation: str = "none",
+                             interpret: bool = False):
+    """Compact-layout inverse tile DFT with the fused bias+activation tail:
+    2x (n, P) planes + (n, 1) bias -> (n, delta, delta) real."""
+    assert n % bt == 0
+    if activation not in _TAIL_ACTIVATIONS:
+        raise ValueError(f"unsupported kernel-tail activation "
+                         f"{activation!r}: {tuple(_TAIL_ACTIVATIONS)}")
+    dh = delta // 2 + 1
+    z_spec = pl.BlockSpec((bt, P), lambda i: (i, 0))
+    y_spec = pl.BlockSpec((bt, delta, delta), lambda i: (i, 0, 0))
+    b_spec = pl.BlockSpec((bt, 1), lambda i: (i, 0))
+    rect = delta * dh
+    return pl.pallas_call(
+        functools.partial(_rinv_epilogue_kernel, delta=delta,
+                          activation=activation),
+        grid=(n // bt,),
+        in_specs=[z_spec, z_spec, _mat_spec((delta, delta)),
+                  _mat_spec((delta, delta)), _mat_spec((delta, dh)),
+                  _mat_spec((delta, dh)), _mat_spec((1, rect)),
+                  _mat_spec((1, rect)), b_spec],
         out_specs=y_spec,
         out_shape=jax.ShapeDtypeStruct((n, delta, delta), dtype),
         interpret=interpret,

@@ -6,9 +6,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.dft import dft_mats
+import math
+
+from repro.core.dft import dft_mats, compact_layout, num_freq_real
 from repro.kernels.dft_tile.kernel import (
     tile_fft_call, tile_ifft_call, tile_ifft_epilogue_call,
+    tile_rfft_call, tile_irfft_call, tile_irfft_epilogue_call,
 )
 
 
@@ -27,11 +30,17 @@ def resolve_bt(n: int, bt=None) -> int:
     """Merge an explicit tile-batch block override over ``DEFAULT_BT``.
 
     ``None`` means "use the default"; explicit values must be positive
-    ints.  Either way the block is clamped to the tile count (padding a
-    6-tile problem to a 256-wide block would be pure waste).
+    ints and are honored verbatim (clamped to the tile count — padding a
+    6-tile problem to a 256-wide block would be pure waste).  The default
+    additionally *shrinks to fit*: it keeps the grid-step count the
+    full-size default would need and balances the block across those
+    steps, so padding is applied at most once for the whole batch instead
+    of up to ``bt - 1`` ghost tiles per call (n=1000 gets bt=250, not a
+    256-block padded to 1024).
     """
     if bt is None:
-        bt = DEFAULT_BT
+        steps = max(1, math.ceil(n / DEFAULT_BT))
+        return max(1, math.ceil(n / steps))
     if isinstance(bt, bool) or not isinstance(bt, int) or bt <= 0:
         raise ValueError(
             f"dft_tile block override bt must be a positive int or None, "
@@ -92,3 +101,73 @@ def tile_ifft_epilogue_pallas(Zr, Zi, bias, *, activation: str = "none",
                                    activation=activation,
                                    interpret=interpret)
     return call(Zrp, Zip, Fvr, Fvi, Wr, Wi, bp)[:n]
+
+
+# --------------------------------------------------------------------------
+# Compact-Hermitian (rfft) variants: flat (n, P) spectrum planes
+# --------------------------------------------------------------------------
+
+def _layout_operands(delta):
+    """(store (1,P), src (1,rect), sgn (1,rect)) kernel operands."""
+    store, src, sgn = compact_layout(delta)
+    return store[None, :], src[None, :], sgn[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("delta", "bt", "interpret"))
+def tile_rfft_pallas(x, *, delta: int = 16, bt: int | None = None,
+                     interpret: bool | None = None):
+    """Forward DFT + compact-Hermitian pack: (n, delta, delta) -> 2x (n, P)
+    with ``P = num_freq_real(delta)`` (~delta^2/2; see
+    ``repro.core.dft.compact_layout``).  DC/Nyquist self-conjugate columns
+    keep only their non-redundant rows, for even and odd delta alike."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    n = x.shape[0]
+    bt = resolve_bt(n, bt)
+    xp = _pad_tiles(x, bt)
+    Fr, Fi, Fhr, Fhi, *_ = dft_mats(delta)
+    store, _, _ = _layout_operands(delta)
+    P = num_freq_real(delta)
+    call = tile_rfft_call(xp.shape[0], delta, P, x.dtype, bt=bt,
+                          interpret=interpret)
+    Tr, Ti = call(xp, Fr, Fi, Fhr, Fhi, store)
+    return Tr[:n], Ti[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("delta", "bt", "interpret"))
+def tile_irfft_pallas(Zr, Zi, *, delta: int = 16, bt: int | None = None,
+                      interpret: bool | None = None):
+    """Compact-layout inverse DFT: 2x (n, P) -> (n, delta, delta) real.
+    Accepts ``P >= num_freq_real(delta)`` (trailing padding is ignored)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    n, P = Zr.shape
+    bt = resolve_bt(n, bt)
+    Zrp, Zip = _pad_tiles(Zr, bt), _pad_tiles(Zi, bt)
+    *_, Fvr, Fvi, Wr, Wi = dft_mats(delta)
+    _, src, sgn = _layout_operands(delta)
+    call = tile_irfft_call(Zrp.shape[0], delta, P, Zr.dtype, bt=bt,
+                           interpret=interpret)
+    return call(Zrp, Zip, Fvr, Fvi, Wr, Wi, src, sgn)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "delta", "bt",
+                                             "interpret"))
+def tile_irfft_epilogue_pallas(Zr, Zi, bias, *, activation: str = "none",
+                               delta: int = 16, bt: int | None = None,
+                               interpret: bool | None = None):
+    """Compact-layout inverse DFT with the conv epilogue fused into the
+    tail: 2x (n, P) + (n,) bias -> (n, delta, delta), bias-shifted and
+    activated while the block is VMEM-resident."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    n, P = Zr.shape
+    bt = resolve_bt(n, bt)
+    Zrp, Zip = _pad_tiles(Zr, bt), _pad_tiles(Zi, bt)
+    bp = _pad_tiles(bias.reshape(n, 1).astype(Zr.dtype), bt)
+    *_, Fvr, Fvi, Wr, Wi = dft_mats(delta)
+    _, src, sgn = _layout_operands(delta)
+    call = tile_irfft_epilogue_call(Zrp.shape[0], delta, P, Zr.dtype, bt=bt,
+                                    activation=activation,
+                                    interpret=interpret)
+    return call(Zrp, Zip, Fvr, Fvi, Wr, Wi, src, sgn, bp)[:n]

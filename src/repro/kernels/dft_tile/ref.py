@@ -1,5 +1,7 @@
 """Pure-jnp oracle for the tile DFT kernels."""
-from repro.core.dft import rfft2_tiles, irfft2_tiles
+from repro.core.dft import (
+    rfft2_tiles, irfft2_tiles, pack_half_spectrum, unpack_half_spectrum,
+)
 
 
 def tile_fft_ref(x, delta):
@@ -9,4 +11,16 @@ def tile_fft_ref(x, delta):
 
 def tile_ifft_ref(Zr, Zi, delta):
     """(n, delta, delta//2+1) x2 -> (n, delta, delta)."""
+    return irfft2_tiles(Zr, Zi, delta)
+
+
+def tile_rfft_ref(x, delta):
+    """(n, delta, delta) -> compact planes (n, num_freq_real(delta)) x2."""
+    Tr, Ti = rfft2_tiles(x, delta)
+    return pack_half_spectrum(Tr, Ti, delta)
+
+
+def tile_irfft_ref(Zr, Zi, delta):
+    """Compact planes (n, P >= num_freq_real(delta)) x2 -> (n, delta, delta)."""
+    Zr, Zi = unpack_half_spectrum(Zr, Zi, delta)
     return irfft2_tiles(Zr, Zi, delta)

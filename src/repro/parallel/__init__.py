@@ -1,7 +1,6 @@
-"""Distributed schedules: nFFT (paper) / wFFT (baseline) + shared utilities."""
-from repro.parallel.fftconv_dist import fft_conv2d_sharded
+"""Distributed utilities (expert-parallel MoE).  The sharded conv entry
+point lives in the plan/execute engine: ``repro.conv.plan_conv`` with a
+mesh + ``schedule="nfft"``/``"wfft"``."""
+from repro.parallel.ep_moe import moe_forward_ep
 
-__all__ = ["fft_conv2d_sharded"]
-from repro.parallel.ep_moe import moe_forward_ep  # noqa: E402,F401
-
-__all__ += ["moe_forward_ep"]
+__all__ = ["moe_forward_ep"]

@@ -112,6 +112,9 @@ def test_spec_signature_separates_geometry_and_constraints(tune_env):
     # kernel-transform placement changes the measured nfft pipeline
     assert s1 != autotune.spec_signature(
         X_SHAPE, K_SHAPE, padding=1, replicate_kernel_transform=True)
+    # a spectrum-pinned sweep must never answer for an unconstrained one
+    assert s1 != autotune.spec_signature(X_SHAPE, K_SHAPE, padding=1,
+                                         spectrum="complex")
 
 
 def test_corrupt_cache_file_is_tolerated(tune_env):
@@ -243,9 +246,14 @@ def test_explicit_blocks_beat_tuned_blocks(tune_env):
 
 def test_resolve_blocks_defaults_and_validation():
     from repro.kernels.cgemm import default_blocks, resolve_blocks
-    assert resolve_blocks(100, 24, 3) == default_blocks(100, 24, 3) \
-        == (128, 32, 8)
-    assert resolve_blocks(100, 24, 3, bm=16, bk=64) == (16, 32, 64)
+    # heuristic defaults round UP; the resolver shrinks them to fit the
+    # dim (same grid-step count, at most one lane of padding) so padding
+    # is applied once, not re-grown at every stage
+    assert default_blocks(100, 24, 3) == (128, 32, 8)
+    assert resolve_blocks(100, 24, 3) == (104, 24, 8)
+    assert resolve_blocks(128, 32, 8) == (128, 32, 8)  # exact fit: verbatim
+    # explicit pins are honored verbatim; unpinned dims still shrink
+    assert resolve_blocks(100, 24, 3, bm=16, bk=64) == (16, 24, 64)
     for bad in (0, -8, 2.5, True, "16"):
         with pytest.raises(ValueError, match="positive int"):
             resolve_blocks(100, 24, 3, bn=bad)
@@ -253,10 +261,12 @@ def test_resolve_blocks_defaults_and_validation():
 
 def test_resolve_bt_defaults_clamp_and_validation():
     from repro.kernels.dft_tile import DEFAULT_BT, resolve_bt
-    assert resolve_bt(1000) == DEFAULT_BT
-    assert resolve_bt(10) == 10                # clamped to tile count
-    assert resolve_bt(1000, 64) == 64
-    assert resolve_bt(48, 64) == 48
+    # default shrinks to fit: same step count as DEFAULT_BT, balanced
+    assert resolve_bt(1000) == 250
+    assert resolve_bt(DEFAULT_BT) == DEFAULT_BT
+    assert resolve_bt(10) == 10                # smaller than the default
+    assert resolve_bt(1000, 64) == 64          # explicit pin: verbatim
+    assert resolve_bt(48, 64) == 48            # ... clamped to tile count
     for bad in (0, -1, True, 1.5):
         with pytest.raises(ValueError, match="positive int"):
             resolve_bt(100, bad)
@@ -282,13 +292,13 @@ def test_plan_blocks_reach_cgemm_kernel(tune_env, monkeypatch):
 def test_plan_dft_bt_reaches_fused_inverse(tune_env, monkeypatch):
     from repro.kernels import dft_tile as dft_mod
     seen = {}
-    real = dft_mod.tile_ifft_epilogue_pallas
+    real = dft_mod.tile_irfft_epilogue_pallas
 
     def spy(Zr, Zi, bias, **kw):
         seen["bt"] = kw.get("bt")
         return real(Zr, Zi, bias, **kw)
 
-    monkeypatch.setattr(dft_mod, "tile_ifft_epilogue_pallas", spy)
+    monkeypatch.setattr(dft_mod, "tile_irfft_epilogue_pallas", spy)
     plan = plan_conv(X_SHAPE, K_SHAPE, padding=1, backend="fft-pallas",
                      dft_bt=32, cache=False,
                      epilogue=Epilogue(bias=True, activation="relu"))
@@ -328,6 +338,22 @@ def test_candidates_cover_the_space_and_order_cheap_first(tune_env):
     pinned = autotune.candidates(spec, bm=8, bn=8, bk=8, dft_bt=32)
     assert all((c.bm, c.dft_bt) == (8, 32)
                for c in pinned if c.backend == "fft-pallas")
+
+
+def test_candidates_spectrum_axis(tune_env):
+    spec = autotune._make_spec(X_SHAPE, K_SHAPE, (1, 1), 16)
+    local = autotune.candidates(spec)
+    # FFT backends get both frequency layouts; direct has no spectrum
+    for be in ("fft-xla", "fft-pallas"):
+        assert {c.spectrum for c in local if c.backend == be} \
+            == {"real", "complex"}
+    assert all(c.spectrum == "real" for c in local if c.backend == "direct")
+    assert local[0].spectrum == "real"         # cost-model pick stays first
+    # pinning the spectrum collapses the axis (and drops direct for the
+    # complex-only sweep — plan_conv rejects direct+complex)
+    pinned = autotune.candidates(spec, spectrum="complex")
+    assert {c.spectrum for c in pinned} == {"complex"}
+    assert "direct" not in {c.backend for c in pinned}
 
 
 def test_plan_network_tuned_sweep_and_report(tune_env):

@@ -212,22 +212,19 @@ def _run_stage_op(seed):
     stages.stage_input_transform(_rand((1, 1, 8, 8), seed), spec)
 
 
-def test_stage_trace_nested_and_shim_compat():
-    """The deprecated global-counter shims still work (with a warning
-    pointing at stage_trace / the analyzer) and agree with nested traces."""
-    from repro.conv import reset_stage_counts, stage_counts
-    with pytest.warns(DeprecationWarning, match="stage_trace"):
-        reset_stage_counts()
+def test_stage_trace_nested():
+    """Nested traces each count their own window; the outer sees both.
+    The old global-counter shims (``stage_counts``/``reset_stage_counts``)
+    are gone — ``stage_trace`` is the only counting surface."""
+    import repro.conv as conv_pkg
+    assert not hasattr(conv_pkg, "stage_counts")
+    assert not hasattr(conv_pkg, "reset_stage_counts")
     with stage_trace() as outer:
         _run_stage_op(24)
         with stage_trace() as inner:
             _run_stage_op(25)
     assert inner["input_transform"] == 1
     assert outer["input_transform"] == 2       # outer sees nested trace too
-    with pytest.warns(DeprecationWarning, match="stage_trace"):
-        assert stage_counts()["input_transform"] == 2   # global shim counts
-    with pytest.warns(DeprecationWarning):
-        reset_stage_counts()
 
 
 def test_stage_trace_empty_nested_traces_unwind_cleanly():

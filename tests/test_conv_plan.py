@@ -271,7 +271,13 @@ def test_plan_metadata_and_flops():
                      backend="fft-xla")
     assert plan.out_shape == (2, 4, 20, 20)
     assert plan.differentiable
-    assert plan.flops() == plan.spec.cgemm_flops(three_m=True) \
+    assert plan.flops() == \
+        plan.spec.cgemm_flops(three_m=True, spectrum=plan.spectrum) \
+        + plan.spec.transform_flops()
+    # the compact Hermitian layout is the default and is cheaper than the
+    # historical rect rfft2 grid
+    assert plan.spectrum == "real"
+    assert plan.flops() < plan.spec.cgemm_flops(three_m=True) \
         + plan.spec.transform_flops()
     direct = plan_conv((2, 8, 20, 20), (4, 8, 3, 3), padding=1,
                        backend="direct")

@@ -43,15 +43,18 @@ err = float(jnp.max(jnp.abs(y - y0))) / float(jnp.max(jnp.abs(y0)))
 assert err < 1e-4, ("nfft_repG", err)
 hlo = f.lower(x, k).compile().as_text()
 assert "all-reduce" not in hlo, "repG must not introduce an all-reduce"
-# deprecated shim still routes through the same plans
-import warnings
-from repro.parallel import fft_conv2d_sharded
-with warnings.catch_warnings():
-    warnings.simplefilter("ignore", DeprecationWarning)
-    y = jax.jit(lambda a, b: fft_conv2d_sharded(a, b, mesh, strategy="nfft",
-                                                padding=1))(x, k)
+# the full-spectrum twin must agree with the default compact layout, and
+# the compact plan must move at most 0.55x the twin's collective bytes
+f = jax.jit(plan_conv(x.shape, k.shape, schedule="nfft", mesh=mesh,
+                      padding=1, spectrum="complex"))
+y = f(x, k)
 err = float(jnp.max(jnp.abs(y - y0))) / float(jnp.max(jnp.abs(y0)))
-assert err < 1e-4, ("shim", err)
+assert err < 1e-4, ("complex", err)
+from repro.conv import analyze
+prof = analyze(plan_conv(x.shape, k.shape, schedule="nfft", mesh=mesh,
+                         padding=1))
+assert prof.spectrum == "real", prof.spectrum
+assert prof.spectrum_delta["ratio"] <= 0.55, prof.spectrum_delta
 print("DIST_OK")
 """
 
