@@ -29,8 +29,8 @@ import subprocess
 import sys
 
 _WORKER = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(ndev)d"
+from repro.launch import env as _env
+_env.apply(%(ndev)d)   # device-count forcing + latency-hiding scheduler
 import sys, json, time
 import jax, jax.numpy as jnp, numpy as np
 from repro.conv import plan_conv
@@ -55,6 +55,8 @@ elif variant == "nfft_repG_bf16":
     kw["compute_dtype"] = jnp.bfloat16
 elif variant == "nfft_4m":
     kw["three_m"] = False
+elif variant == "nfft_overlap2":
+    kw["overlap"] = "slab:2"
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.standard_normal(
     (spec["B"], spec["C"], spec["H"], spec["W"])), jnp.float32)
@@ -109,7 +111,7 @@ print("RESULT" + json.dumps(out))
 """
 
 VARIANTS = ("wfft", "nfft", "nfft_ep_fused", "nfft_ep_unfused",
-            "nfft_repG", "nfft_repG_bf16", "nfft_4m")
+            "nfft_repG", "nfft_repG_bf16", "nfft_4m", "nfft_overlap2")
 
 
 def run(layer, variant, *, ndev, nd, nm, measure, reps=3):
@@ -135,6 +137,10 @@ def main(argv=None):
                     help="analysis batch (production scale)")
     ap.add_argument("--measure-batch", type=int, default=8)
     ap.add_argument("--json-out", default="")
+    ap.add_argument("--variants", default="",
+                    help="comma list to (re)generate a subset; with "
+                         "--json-out, new results merge into the existing "
+                         "file instead of replacing it")
     args = ap.parse_args(argv)
 
     from repro.configs.paper_convs import TABLE1
@@ -142,11 +148,23 @@ def main(argv=None):
     base = dict(C=lay.C, Co=lay.Cout, H=lay.H, W=lay.W, kh=lay.kh,
                 pad=lay.pad)
 
+    chosen = VARIANTS
+    if args.variants:
+        chosen = tuple(v.strip() for v in args.variants.split(",")
+                       if v.strip())
+        unknown = [v for v in chosen if v not in VARIANTS]
+        if unknown:
+            raise SystemExit(f"unknown variants {unknown} "
+                             f"(choose from {VARIANTS})")
+
     print(f"# conv_roofline {args.layer}: analysis B={args.batch} on 16x16 "
           f"(256 chips); wall time B={args.measure_batch} on 2x4 host mesh")
     print("name,us_per_call,us_per_call_prepared,derived")
     results = {}
-    for v in VARIANTS:
+    if args.variants and args.json_out and os.path.exists(args.json_out):
+        with open(args.json_out) as fh:
+            results.update(json.load(fh))   # subset runs merge, not replace
+    for v in chosen:
         ana = run(dict(base, B=args.batch), v, ndev=256, nd=16, nm=16,
                   measure=False)
         wall = run(dict(base, B=args.measure_batch), v, ndev=8, nd=2, nm=4,
@@ -167,6 +185,16 @@ def main(argv=None):
         print(f"# epilogue fusion: {extra:.3e} extra collective bytes/dev "
               f"unfused (should be ~0 — the win is elementwise HBM "
               f"traffic), wall delta {dw*1e6:+.0f}us/call")
+    if {"nfft", "nfft_overlap2"} <= results.keys():
+        sync = results["nfft"]
+        ovl = results["nfft_overlap2"]
+        extra = (ovl["analysis"]["coll_bytes_dev"]
+                 - sync["analysis"]["coll_bytes_dev"])
+        dw = sync["wall"]["wall_s"] - ovl["wall"]["wall_s"]
+        print(f"# overlap (slab:2 vs synchronous nfft): {extra:+.3e} "
+              f"collective bytes/dev (must be ~0 — overlap hides latency, "
+              f"it never re-sends), wall delta {dw*1e6:+.0f}us/call "
+              f"in favor of overlapped")
     if args.json_out:
         with open(args.json_out, "w") as fh:
             json.dump(results, fh, indent=1)

@@ -47,6 +47,15 @@ On top of the profile sits a declarative invariant registry keyed by
                               the plan's full-spectrum (complex) twin
     *        wfft (real)      <= 0.55x the hot psum bytes of the twin
 
+Overlapped plans (``overlap="slab:k"``) scale the count rules per slab —
+nfft traces ``4k + 2`` all_to_all eqns (D/Z boundaries per slab, kernel
+boundary once), wfft ``2k`` psums, each stage op ``k`` times (stage 2
+once) — and add two rules of their own: total collective bytes must stay
+<= 1.0x the sequential (``overlap="off"``) twin's (the slabs repartition
+the rows, they must never re-send them), and on ``fft-pallas`` every
+sub-slab's cgemm must resolve the one plan-pinned block config (no
+per-slab re-padding).
+
 The real-spectrum rules are *relative*: ``analyze`` traces the same plan
 with ``spectrum="complex"`` (``dataclasses.replace`` twin) and compares
 collective operand bytes — certifying that the compact Hermitian packing
@@ -200,11 +209,18 @@ class PlanProfile:
     elision: Optional[Dict[str, int]] = None   # full minus prepared counts
     spectrum: str = "real"                     # plan frequency layout
     spectrum_delta: Optional[Dict[str, Any]] = None  # vs complex twin
+    overlap: str = "off"                       # plan overlap knob (resolved)
+    num_slabs: int = 1                         # sub-slab count (1 = off)
+    blocks: Optional[Tuple] = None             # plan (bm, bn, bk) pins
+    cgemm_shapes: Tuple = ()                   # distinct (M, N, K) at stage 3
+    overlap_delta: Optional[Dict[str, Any]] = None   # vs sequential twin
 
     def describe_key(self) -> str:
         tags = [self.backend, self.schedule]
         if self.prepared:
             tags.append("prepared")
+        if self.num_slabs > 1:
+            tags.append(self.overlap)
         if self.spectrum != "real":
             tags.append(self.spectrum)
         if self.epilogue != "none":
@@ -227,6 +243,8 @@ class PlanProfile:
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["cgemm_dtypes"] = list(self.cgemm_dtypes)
+        d["blocks"] = list(self.blocks) if self.blocks else None
+        d["cgemm_shapes"] = [list(s) for s in self.cgemm_shapes]
         return d
 
 
@@ -281,9 +299,19 @@ def _expect_counts(**expected):
 
 
 def _nfft_a2a(p: PlanProfile) -> int:
-    # 3 boundaries x re/im = 6; prepared elides boundary #2 (stage 2 was
-    # paid at prepare time), replicate_kernel_transform never emits it.
-    return 4 if (p.prepared or p.replicate_kernel_transform) else 6
+    # per slab: D boundary #1 + Z boundary #3 (re/im pairs = 4 eqns);
+    # kernel boundary #2 is shared by all slabs and traced once (2 eqns) —
+    # prepared elides it (stage 2 was paid at prepare time) and
+    # replicate_kernel_transform never emits it.  num_slabs=1 recovers the
+    # sequential 6 full / 4 prepared-or-replicated counts.
+    s = max(1, p.num_slabs)
+    return 4 * s + (0 if (p.prepared or p.replicate_kernel_transform)
+                    else 2)
+
+
+def _wfft_psum(p: PlanProfile) -> int:
+    # the hot-stage all-reduce pair, once per sub-slab
+    return 2 * max(1, p.num_slabs)
 
 
 def _rule_local_collective_free(p: PlanProfile) -> Optional[str]:
@@ -296,7 +324,10 @@ def _rule_local_collective_free(p: PlanProfile) -> Optional[str]:
 def _rule_stage_ops_once(p: PlanProfile) -> Optional[str]:
     if not p.is_pipeline:
         return None
-    want = {"input_transform": 1, "cgemm": 1, "output_inverse": 1,
+    s = max(1, p.num_slabs)
+    # stages 1/3/4 run once per sub-slab; the kernel transform is shared
+    # by all slabs (never duplicated) and elided entirely when prepared
+    want = {"input_transform": s, "cgemm": s, "output_inverse": s,
             "kernel_transform": 0 if p.prepared else 1}
     bad = [f"{k}: expected {v}, traced {p.stage_counts.get(k, 0)}"
            for k, v in want.items() if p.stage_counts.get(k, 0) != v]
@@ -372,6 +403,51 @@ def _rule_prepared_elides_boundary(p: PlanProfile) -> Optional[str]:
     return None
 
 
+# Overlapped execution repartitions the batch rows across sub-slab
+# collectives — it must never re-send them.  Exact parity is expected
+# (the per-slab paddings are proportional); the epsilon only absorbs
+# float division.
+_OVERLAP_BYTES_RATIO = 1.005
+
+
+def _rule_overlap_bytes_parity(p: PlanProfile) -> Optional[str]:
+    if p.num_slabs <= 1 or not p.overlap_delta:
+        return None
+    ratio = p.overlap_delta.get("ratio")
+    if ratio is not None and ratio > _OVERLAP_BYTES_RATIO:
+        return (f"overlapped plan moves {ratio:.4f}x the collective bytes "
+                f"of its sequential (overlap='off') twin "
+                f"({p.overlap_delta.get('collective_bytes')} vs "
+                f"{p.overlap_delta.get('twin_collective_bytes')}); "
+                f"sub-slabbing must repartition rows, not duplicate them")
+    return None
+
+
+def _rule_overlap_uniform_blocks(p: PlanProfile) -> Optional[str]:
+    """Every sub-slab's cgemm must resolve to the ONE block config pinned
+    at plan time — differing per-slab resolutions mean distinct compiled
+    kernels and re-padding on every call (the bug the plan-time clamp
+    fixes)."""
+    if p.num_slabs <= 1 or not p.cgemm_shapes:
+        return None
+    from repro.kernels.cgemm.ops import resolve_blocks
+    bm, bn, bk = p.blocks if p.blocks else (None, None, None)
+    resolved = {resolve_blocks(m, n, c, bm, bn, bk)
+                for (m, n, c) in p.cgemm_shapes}
+    if len(resolved) > 1:
+        return (f"sub-slab cgemm shapes {sorted(p.cgemm_shapes)} resolve "
+                f"different block configs {sorted(resolved)}; blocks must "
+                f"be clamped once at plan time")
+    rbm = next(iter(resolved))[0]
+    m_min = min(m for m, _, _ in p.cgemm_shapes)
+    lane_fit = -(-m_min // 8) * 8
+    if rbm > lane_fit:
+        return (f"resolved bm={rbm} exceeds the smallest sub-slab's "
+                f"lane-aligned rows (M={m_min} -> {lane_fit}): the small "
+                f"slabs re-pad on every call")
+    return None
+
+
 def _register_builtin_invariants() -> None:
     register_invariant(
         "*", "local", "local-collective-free", _rule_local_collective_free,
@@ -381,22 +457,26 @@ def _register_builtin_invariants() -> None:
         _expect_counts(all_to_all=_nfft_a2a, psum=0, ppermute=0,
                        all_gather=0),
         "tuple partitioning: one a2a pair per live stage boundary and a "
-        "collective-free hot CGEMM (6 full / 4 prepared or replicated)")
+        "collective-free hot CGEMM (6 full / 4 prepared or replicated; "
+        "the D/Z boundary pairs scale per sub-slab when overlapped)")
     register_invariant(
         "*", "nfft", "nfft-prepared-elision", _rule_prepared_elides_boundary,
         "prepared nfft skips stage 2 AND boundary all-to-all #2")
     register_invariant(
         "*", "nfft", "nfft-hot-cast",
-        _rule_cast_before_hot_collective("all_to_all", 4),
+        _rule_cast_before_hot_collective("all_to_all",
+                                         lambda p: 4 * max(1, p.num_slabs)),
         "compute_dtype cast lands before the D/Z boundary a2a pairs "
         "(the kernel boundary stays f32)")
     register_invariant(
         "*", "wfft", "wfft-hot-psum-pair",
-        _expect_counts(psum=2, all_to_all=0, ppermute=0, all_gather=0),
-        "baseline: exactly the hot-stage all-reduce pair, nothing else")
+        _expect_counts(psum=_wfft_psum, all_to_all=0, ppermute=0,
+                       all_gather=0),
+        "baseline: exactly the hot-stage all-reduce pair (per sub-slab "
+        "when overlapped), nothing else")
     register_invariant(
         "*", "wfft", "wfft-hot-cast",
-        _rule_cast_before_hot_collective("psum", 2),
+        _rule_cast_before_hot_collective("psum", _wfft_psum),
         "compute_dtype cast lands before the hot-stage psum pair")
     register_invariant(
         "*", "nfft", "nfft-rfft-halves-a2a",
@@ -422,6 +502,16 @@ def _register_builtin_invariants() -> None:
     register_invariant(
         "*", "*", "epilogue-fusion-free", _rule_epilogue_free,
         "a fused epilogue adds zero collectives and zero stage ops")
+    register_invariant(
+        "*", "*", "overlap-bytes-parity", _rule_overlap_bytes_parity,
+        "an overlapped plan's total collective bytes stay <= 1.0x its "
+        "sequential (overlap='off') twin's — sub-slabbing repartitions "
+        "the rows, it never re-sends them")
+    register_invariant(
+        "fft-pallas", "*", "overlap-uniform-blocks",
+        _rule_overlap_uniform_blocks,
+        "every sub-slab's cgemm resolves the one plan-pinned block "
+        "config (no per-slab re-resolution / re-padding)")
 
 
 _register_builtin_invariants()
@@ -544,6 +634,9 @@ def _profile_from_trace(plan, jaxpr, counts, *, prepared: bool):
     cgemm_dtypes = tuple(sorted(
         k[1] for k in counts if isinstance(k, tuple) and k[0] == "cgemm_dtype"
     ))
+    cgemm_shapes = tuple(sorted(
+        k[1] for k in counts if isinstance(k, tuple) and k[0] == "cgemm_shape"
+    ))
     be = registry.get_backend(plan.backend)
     return PlanProfile(
         backend=plan.backend, schedule=plan.schedule, prepared=prepared,
@@ -555,7 +648,10 @@ def _profile_from_trace(plan, jaxpr, counts, *, prepared: bool):
         collective_bytes=coll_bytes, stage_counts=stage_counts,
         cgemm_dtypes=cgemm_dtypes, has_f64=f64[0],
         peak_live_bytes=_peak_live_bytes(jaxpr.jaxpr), n_eqns=n_eqns[0],
-        spectrum=getattr(plan, "spectrum", "real"))
+        spectrum=getattr(plan, "spectrum", "real"),
+        overlap=getattr(plan, "overlap", "off"),
+        num_slabs=getattr(plan, "num_slabs", 1),
+        blocks=(plan.bm, plan.bn, plan.bk), cgemm_shapes=cgemm_shapes)
 
 
 def analyze(target, *, prepared: bool = False) -> PlanProfile:
@@ -636,6 +732,25 @@ def analyze(target, *, prepared: bool = False) -> PlanProfile:
             "collective_bytes": profile.collective_bytes,
             "twin_collective_bytes": tp.collective_bytes,
             "ratio": ratio})
+
+    # Overlapped plans get a bytes-parity profile against their sequential
+    # twin (same plan, overlap="off"): the sub-slab collectives must
+    # repartition the rows the synchronous path moves, never re-send them.
+    if profile.is_pipeline and profile.num_slabs > 1:
+        seq = dataclasses.replace(plan, overlap="off")
+        if prepared:
+            sq = _profile_from_trace(seq, *_trace_prepared(seq),
+                                     prepared=True)
+        else:
+            sq = _profile_from_trace(seq, *_trace_full(seq), prepared=False)
+        ratio = (profile.collective_bytes / sq.collective_bytes
+                 if sq.collective_bytes else None)
+        profile = dataclasses.replace(profile, overlap_delta={
+            "collective_bytes": profile.collective_bytes,
+            "twin_collective_bytes": sq.collective_bytes,
+            "ratio": ratio,
+            "collectives": dict(profile.collectives),
+            "twin_collectives": dict(sq.collectives)})
     return profile
 
 
@@ -644,7 +759,7 @@ def analyze(target, *, prepared: bool = False) -> PlanProfile:
 # --------------------------------------------------------------------------
 
 VIOLATION_MODES = ("extra-collective", "extra-stage", "skip-cast",
-                   "rfft-unpacked")
+                   "rfft-unpacked", "overlap-oversend")
 
 
 @contextlib.contextmanager
@@ -660,10 +775,41 @@ def seeded_violation(mode: str = "extra-collective"):
       rfft-unpacked     the compact-Hermitian pack degrades to a plain
                         half-plane flatten — real-spectrum plans ship the
                         redundant self-conjugate rows again and the
-                        bytes-ratio invariants must trip.
+                        bytes-ratio invariants must trip;
+      overlap-oversend  every sub-slab collective pads its M rows 2x
+                        before the wire and slices back after — only
+                        overlapped plans are hit (the sequential twin is
+                        untouched), so the overlap-bytes-parity invariant
+                        must trip.
     """
     from repro.conv import stages
-    if mode == "extra-collective":
+    if mode == "overlap-oversend":
+        import jax.numpy as jnp
+        orig_a2a = stages._slab_a2a
+        orig_psum = stages._slab_psum
+
+        def _oversend(T):
+            return jnp.concatenate([T, jnp.zeros_like(T)], axis=1)
+
+        def broken_a2a(Tr, Ti, axis_name, split, concat):
+            m = Tr.shape[1]          # M rides axis 1 across both boundaries
+            Tr, Ti = orig_a2a(_oversend(Tr), _oversend(Ti), axis_name,
+                              split, concat)
+            return Tr[:, :m], Ti[:, :m]
+
+        def broken_psum(Zr, Zi, axis_name):
+            m = Zr.shape[1]
+            Zr, Zi = orig_psum(_oversend(Zr), _oversend(Zi), axis_name)
+            return Zr[:, :m], Zi[:, :m]
+
+        stages._slab_a2a = broken_a2a
+        stages._slab_psum = broken_psum
+        try:
+            yield
+        finally:
+            stages._slab_a2a = orig_a2a
+            stages._slab_psum = orig_psum
+    elif mode == "extra-collective":
         import jax
         orig = stages._boundary_a2a
 
@@ -736,12 +882,14 @@ def _paper_geometries(batch: int, limit: Optional[int] = None):
 
 
 def sweep(*, batch: int = 4, limit: Optional[int] = None,
-          compute_dtype="bfloat16", progress=print):
+          compute_dtype="bfloat16", progress=print, pairs=None):
     """Profile + check every registered backend x schedule pair over the
     paper geometries x {full, prepared, fused-epilogue, compute-dtype,
-    full-spectrum (complex)} variants.  Returns ``(profiles,
-    violations)`` where ``profiles`` maps
-    ``"backend/schedule/layer/variant"`` to a ``PlanProfile``."""
+    full-spectrum (complex), overlapped (slab:2)} variants.  Returns
+    ``(profiles, violations)`` where ``profiles`` maps
+    ``"backend/schedule/layer/variant"`` to a ``PlanProfile``.  ``pairs``
+    restricts the sweep to a subset of (backend, schedule) pairs — the
+    ``--jobs`` process-parallel tracer partitions the registry this way."""
     import jax.numpy as jnp
     from repro.compat import make_mesh
     from repro.conv import registry
@@ -752,7 +900,9 @@ def sweep(*, batch: int = 4, limit: Optional[int] = None,
     profiles: Dict[str, PlanProfile] = {}
     violations: List[Tuple[str, Violation]] = []
     cdt = jnp.dtype(compute_dtype) if compute_dtype else None
-    for backend, schedule in registry.backend_schedule_pairs():
+    if pairs is None:
+        pairs = registry.backend_schedule_pairs()
+    for backend, schedule in pairs:
         needs_mesh = registry.get_schedule(schedule).requires_mesh
         if needs_mesh and mesh is None:
             mesh = make_mesh((1, 1), ("data", "model"))
@@ -773,6 +923,11 @@ def sweep(*, batch: int = 4, limit: Optional[int] = None,
                 # the full-spectrum twin is a legal plan in its own right
                 # — certify it directly, not only as a ratio baseline
                 variants.append(("complex", {"spectrum": "complex"}, False))
+                if needs_mesh:
+                    # overlapped sub-slab execution: slab-scaled collective
+                    # counts + bytes parity vs the sequential twin
+                    variants.append(("overlap", {"overlap": "slab:2"},
+                                     False))
             for variant, extra, as_prepared in variants:
                 key = f"{backend}/{schedule}/{name}/{variant}"
                 plan = plan_conv(x_shape, k_shape, **base, **extra)
@@ -783,6 +938,39 @@ def sweep(*, batch: int = 4, limit: Optional[int] = None,
                     violations.append((key, v))
                     progress(f"VIOLATION {key}: {v}")
     return profiles, violations
+
+
+def _sweep_worker(payload):
+    """Module-level (picklable) worker for ``--jobs``: sweep a subset of
+    the backend x schedule pairs in a spawned process, returning plain
+    JSON-able results (profiles as dicts, violations as tuples)."""
+    pairs, batch, limit, inject = payload
+    ctx = seeded_violation(inject) if inject else contextlib.nullcontext()
+    with ctx:
+        profiles, violations = sweep(batch=batch, limit=limit, pairs=pairs,
+                                     progress=lambda s: None)
+    return ({k: p.to_dict() for k, p in profiles.items()},
+            [(k, v.invariant, v.message) for k, v in violations])
+
+
+def _sweep_parallel(jobs: int, batch: int, limit, inject):
+    """Partition the registered pairs round-robin over ``jobs`` spawned
+    processes (each re-imports jax cleanly — seeded violations are applied
+    inside the worker, after its own module state exists)."""
+    import multiprocessing as mp
+    from repro.conv import registry
+    pairs = list(registry.backend_schedule_pairs())
+    chunks = [c for c in (pairs[i::jobs] for i in range(jobs)) if c]
+    ctx = mp.get_context("spawn")
+    with ctx.Pool(processes=len(chunks)) as pool:
+        results = pool.map(_sweep_worker,
+                           [(c, batch, limit, inject) for c in chunks])
+    payload: Dict[str, dict] = {}
+    violations: List[Tuple[str, str, str]] = []
+    for prof, viols in results:
+        payload.update(prof)
+        violations.extend(viols)
+    return payload, violations
 
 
 def main(argv=None) -> int:
@@ -803,30 +991,42 @@ def main(argv=None) -> int:
     ap.add_argument("--inject", choices=VIOLATION_MODES, default=None,
                     help="seed a deliberate pipeline violation first "
                          "(negative self-test: --check must then FAIL)")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="process-parallel tracing: partition the backend "
+                         "x schedule pairs over N spawned workers (the "
+                         "full sweep is tracing-bound)")
     args = ap.parse_args(argv)
     if not args.check and not args.json_out:
         ap.print_help()
         return 2
 
-    ctx = seeded_violation(args.inject) if args.inject \
-        else contextlib.nullcontext()
-    with ctx:
-        profiles, violations = sweep(batch=args.batch, limit=args.limit)
+    if args.jobs > 1:
+        payload, raw_violations = _sweep_parallel(
+            args.jobs, args.batch, args.limit, args.inject)
+        for key, inv, msg in raw_violations:
+            print(f"VIOLATION {key}: [{inv}] {msg}")
+        n_violations = len(raw_violations)
+    else:
+        ctx = seeded_violation(args.inject) if args.inject \
+            else contextlib.nullcontext()
+        with ctx:
+            profiles, violations = sweep(batch=args.batch, limit=args.limit)
+        payload = {k: p.to_dict() for k, p in profiles.items()}
+        n_violations = len(violations)
 
     if args.json_out:
-        payload = {k: p.to_dict() for k, p in profiles.items()}
         with open(args.json_out, "w") as fh:
             json.dump(payload, fh, indent=1, sort_keys=True)
         print(f"# wrote {len(payload)} profiles to {args.json_out}")
 
-    n = len(profiles)
-    if violations:
-        print(f"plan-lint: {len(violations)} violation(s) across "
+    n = len(payload)
+    if n_violations:
+        print(f"plan-lint: {n_violations} violation(s) across "
               f"{n} profiles", file=sys.stderr)
         return 1
     print(f"plan-lint: OK — {n} profiles, 0 violations "
           f"(invariants certified for "
-          f"{len({(p.backend, p.schedule) for p in profiles.values()})} "
+          f"{len({(d['backend'], d['schedule']) for d in payload.values()})} "
           f"backend x schedule pairs)")
     return 0
 

@@ -13,8 +13,8 @@ or, threaded through the planner:
     plan = plan_conv(x_shape, k_shape, padding=1, backend="tuned")
 
 ``tune`` times every candidate (backend, schedule, frequency-layout
-``spectrum``, cgemm ``bm/bn/bk``, ``dft_tile`` ``dft_bt``) configuration
-on the actual device — warmup then
+``spectrum``, sub-slab ``overlap``, cgemm ``bm/bn/bk``, ``dft_tile``
+``dft_bt``) configuration on the actual device — warmup then
 median-of-k, under a wall-clock budget — and persists the winner in a JSON
 tuning cache so the tuning cost is paid once per machine.  Cache entries are
 keyed by the spec signature + device kind + jax version: a new device or a
@@ -63,7 +63,7 @@ from repro.core.conv_spec import ConvSpec
 from repro.conv.plan import _build_spec as _make_spec
 from repro.conv.plan import _normalize_padding
 
-CACHE_VERSION = 2
+CACHE_VERSION = 3
 
 _DEFAULT_CACHE = os.path.join("~", ".cache", "repro_autotune.json")
 _DEFAULT_BUDGET_MS = 2000.0
@@ -88,6 +88,7 @@ class TunedConfig:
     bk: Optional[int] = None
     dft_bt: Optional[int] = None       # dft_tile tile-batch block
     spectrum: str = "real"             # frequency layout (FFT pipelines)
+    overlap: str = "off"               # sub-slab comm/compute overlap
     us_per_call: Optional[float] = None
     source: str = "measured"
 
@@ -256,7 +257,7 @@ def spec_signature(x_shape, k_shape, *, padding=(0, 0), delta: int = 16,
                    compute_dtype=None, data_axis: str = "data",
                    model_axis: str = "model",
                    replicate_kernel_transform: bool = False,
-                   spectrum: str = "auto",
+                   spectrum: str = "auto", overlap: str = "off",
                    bm=None, bn=None, bk=None, dft_bt=None) -> str:
     """Device-independent part of the cache key: the problem + the
     constraints the caller put on the tuner (requested schedule, mesh,
@@ -272,7 +273,7 @@ def spec_signature(x_shape, k_shape, *, padding=(0, 0), delta: int = 16,
             f"|dtype={_dtype_name(compute_dtype)}"
             f"|axes={data_axis},{model_axis}"
             f"|rkt={int(bool(replicate_kernel_transform))}"
-            f"|spec={spectrum}"
+            f"|spec={spectrum}|ov={overlap}"
             f"|pins={bm},{bn},{bk},{dft_bt}")
 
 
@@ -315,6 +316,7 @@ def _merge_pins(cand: TunedConfig, bm, bn, bk, dft_bt) -> TunedConfig:
 
 def candidates(spec: ConvSpec, *, schedule: str = "auto", mesh=None,
                three_m: bool = True, spectrum: str = "auto",
+               overlap: str = "off",
                bm=None, bn=None, bk=None, dft_bt=None) -> list:
     """Enumerate the tuning space, cost-model pick first (so a clamped
     budget still measures the sane default), Pallas configs last (interpret
@@ -324,7 +326,14 @@ def candidates(spec: ConvSpec, *, schedule: str = "auto", mesh=None,
     the FFT backends (the compact half-spectrum wins on bandwidth-bound
     geometries, the full spectrum can win when the packing gather
     dominates); ``direct`` has no spectrum and is tuned as ``"real"``
-    only.  Pinning ``spectrum`` collapses the axis."""
+    only.  Pinning ``spectrum`` collapses the axis.
+
+    ``overlap="auto"`` adds the sub-slab comm/compute-overlap axis
+    (``off``/``slab:2``/``slab:4``) for the sharded FFT schedules; local
+    schedules and ``direct`` have nothing to overlap and stay ``off``.
+    Overlapped Pallas candidates are timed at default blocks only (the
+    planner re-pins blocks against the sub-slab shape, so sweeping block
+    variants per slab count would square the Pallas tail of the sweep)."""
     if schedule != "auto":
         scheds = [schedule]
     else:
@@ -333,6 +342,12 @@ def candidates(spec: ConvSpec, *, schedule: str = "auto", mesh=None,
     out = []
     for sched in scheds:
         local = sched == "local"
+        if local:
+            ovs = ["off"] if overlap in ("auto", "off") else [overlap]
+        elif overlap == "auto":
+            ovs = ["off", "slab:2", "slab:4"]
+        else:
+            ovs = [overlap]
         backends = (["direct", "fft-xla", "fft-pallas"] if local
                     else ["fft-xla", "fft-pallas"])
         for be in backends:
@@ -344,25 +359,31 @@ def candidates(spec: ConvSpec, *, schedule: str = "auto", mesh=None,
                     out.append(TunedConfig(be, sched, spectrum="real"))
                 continue
             for spc in spectra:
-                if be != "fft-pallas":
-                    out.append(TunedConfig(be, sched, spectrum=spc))
-                    continue
-                if spc != "real":
-                    # complex Pallas takes the composed stage-4 path (no
-                    # fused tail) — time only the default-block point
-                    out.append(TunedConfig(be, sched, spectrum=spc))
-                    continue
-                bts = [None, 64] if local else [None]
-                for blocks in _block_candidates(spec):
-                    for bt in bts:
-                        out.append(TunedConfig(be, sched, *blocks,
-                                               dft_bt=bt, spectrum=spc))
+                for ov in ovs:
+                    if be != "fft-pallas":
+                        out.append(TunedConfig(be, sched, spectrum=spc,
+                                               overlap=ov))
+                        continue
+                    if spc != "real" or ov != "off":
+                        # complex Pallas takes the composed stage-4 path
+                        # (no fused tail) and overlapped Pallas re-pins
+                        # blocks per sub-slab — time only the
+                        # default-block point
+                        out.append(TunedConfig(be, sched, spectrum=spc,
+                                               overlap=ov))
+                        continue
+                    bts = [None, 64] if local else [None]
+                    for blocks in _block_candidates(spec):
+                        for bt in bts:
+                            out.append(TunedConfig(be, sched, *blocks,
+                                                   dft_bt=bt, spectrum=spc,
+                                                   overlap=ov))
     out = [_merge_pins(c, bm, bn, bk, dft_bt) for c in out]
     # dedupe (pins can collapse block variants) preserving order
     seen, uniq = set(), []
     for c in out:
         key = (c.backend, c.schedule, c.bm, c.bn, c.bk, c.dft_bt,
-               c.spectrum)
+               c.spectrum, c.overlap)
         if key not in seen:
             seen.add(key)
             uniq.append(c)
@@ -370,7 +391,8 @@ def candidates(spec: ConvSpec, *, schedule: str = "auto", mesh=None,
     # pick is always a single candidate), Pallas variants last
     pick = _cost_model_pick(spec, scheds[0], three_m)
     uniq.sort(key=lambda c: 0 if ((c.backend, c.schedule) == pick
-                                  and c.spectrum == "real")
+                                  and c.spectrum == "real"
+                                  and c.overlap == "off")
               else 1 if c.backend != "fft-pallas" else 2)
     return uniq
 
@@ -414,7 +436,7 @@ def _measure_candidate(cand: TunedConfig, x_shape, k_shape, *, padding,
                      backend=cand.backend, schedule=cand.schedule,
                      mesh=mesh, three_m=three_m, bm=cand.bm, bn=cand.bn,
                      bk=cand.bk, dft_bt=cand.dft_bt,
-                     spectrum=cand.spectrum,
+                     spectrum=cand.spectrum, overlap=cand.overlap,
                      compute_dtype=compute_dtype, data_axis=data_axis,
                      model_axis=model_axis,
                      replicate_kernel_transform=replicate_kernel_transform,
@@ -432,14 +454,16 @@ def _measure_candidate(cand: TunedConfig, x_shape, k_shape, *, padding,
 # --------------------------------------------------------------------------
 
 def _cost_model_config(spec: ConvSpec, schedule: str, mesh, three_m,
-                       spectrum, bm, bn, bk, dft_bt) -> TunedConfig:
+                       spectrum, overlap, bm, bn, bk, dft_bt) -> TunedConfig:
     if schedule == "auto":
         schedule = "nfft" if mesh is not None else "local"
     backend, _ = _cost_model_pick(spec, schedule, three_m)
     if spectrum == "auto" or backend == "direct":
         spectrum = "real"               # compact layout is the engine default
+    if overlap == "auto":
+        overlap = "off"                 # the cost model never bets on overlap
     return TunedConfig(backend, schedule, bm=bm, bn=bn, bk=bk,
-                       dft_bt=dft_bt, spectrum=spectrum,
+                       dft_bt=dft_bt, spectrum=spectrum, overlap=overlap,
                        us_per_call=None, source="cost-model")
 
 
@@ -448,7 +472,7 @@ def tune(x_shape, k_shape, *, padding=(0, 0), delta: int = 16,
          compute_dtype=None, data_axis: str = "data",
          model_axis: str = "model",
          replicate_kernel_transform: bool = False,
-         spectrum: str = "auto",
+         spectrum: str = "auto", overlap: str = "off",
          bm=None, bn=None, bk=None, dft_bt=None,
          budget: Optional[float] = None,
          reps: Optional[int] = None) -> TunedConfig:
@@ -466,7 +490,7 @@ def tune(x_shape, k_shape, *, padding=(0, 0), delta: int = 16,
                       compute_dtype=compute_dtype, data_axis=data_axis,
                       model_axis=model_axis,
                       replicate_kernel_transform=replicate_kernel_transform,
-                      spectrum=spectrum,
+                      spectrum=spectrum, overlap=overlap,
                       bm=bm, bn=bn, bk=bk, dft_bt=dft_bt)
     key = cache_key(x_shape, k_shape, **key_kwargs)
     store = _store()
@@ -481,12 +505,13 @@ def tune(x_shape, k_shape, *, padding=(0, 0), delta: int = 16,
         with _lock:
             _fallbacks += 1
         return _cost_model_config(spec, schedule, mesh, three_m,
-                                  spectrum, bm, bn, bk, dft_bt)
+                                  spectrum, overlap, bm, bn, bk, dft_bt)
     with _lock:
         _misses += 1
 
     cands = candidates(spec, schedule=schedule, mesh=mesh, three_m=three_m,
-                       spectrum=spectrum, bm=bm, bn=bn, bk=bk, dft_bt=dft_bt)
+                       spectrum=spectrum, overlap=overlap,
+                       bm=bm, bn=bn, bk=bk, dft_bt=dft_bt)
     budget = budget_ms() if budget is None else float(budget)
     reps = _env_reps() if reps is None else max(1, int(reps))
     best = None
@@ -510,7 +535,7 @@ def tune(x_shape, k_shape, *, padding=(0, 0), delta: int = 16,
         with _lock:
             _fallbacks += 1
         return _cost_model_config(spec, schedule, mesh, three_m,
-                                  spectrum, bm, bn, bk, dft_bt)
+                                  spectrum, overlap, bm, bn, bk, dft_bt)
     with _lock:
         _measured += 1
     store.put(key, best)

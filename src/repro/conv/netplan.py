@@ -187,27 +187,33 @@ class NetworkPlan:
         for name, plan in self.plans.items():
             cfg = None
             for sched_req in (plan.schedule, "auto"):
-                c = autotune.lookup(
-                    plan.x_shape, plan.k_shape, padding=plan.padding,
-                    delta=plan.spec.delta, schedule=sched_req,
-                    mesh=plan.mesh, three_m=plan.three_m,
-                    compute_dtype=plan.compute_dtype,
-                    data_axis=plan.data_axis, model_axis=plan.model_axis,
-                    replicate_kernel_transform=
-                    plan.replicate_kernel_transform)
-                # only attribute a timing that describes THIS plan's
-                # resolved config — the cache may hold a different
-                # request's winner for the same geometry
-                if c is not None and (
-                        c.backend, c.schedule, c.bm, c.bn, c.bk, c.dft_bt
-                ) == (plan.backend, plan.schedule, plan.bm, plan.bn,
-                      plan.bk, plan.dft_bt):
-                    cfg = c
+                for ov_req in (plan.overlap, "auto"):
+                    c = autotune.lookup(
+                        plan.x_shape, plan.k_shape, padding=plan.padding,
+                        delta=plan.spec.delta, schedule=sched_req,
+                        mesh=plan.mesh, three_m=plan.three_m,
+                        compute_dtype=plan.compute_dtype,
+                        data_axis=plan.data_axis,
+                        model_axis=plan.model_axis,
+                        replicate_kernel_transform=
+                        plan.replicate_kernel_transform,
+                        overlap=ov_req)
+                    # only attribute a timing that describes THIS plan's
+                    # resolved config — the cache may hold a different
+                    # request's winner for the same geometry
+                    if c is not None and (
+                            c.backend, c.schedule, c.bm, c.bn, c.bk,
+                            c.dft_bt, c.overlap
+                    ) == (plan.backend, plan.schedule, plan.bm, plan.bn,
+                          plan.bk, plan.dft_bt, plan.overlap):
+                        cfg = c
+                        break
+                if cfg is not None:
                     break
             out[name] = {
                 "backend": plan.backend, "schedule": plan.schedule,
                 "bm": plan.bm, "bn": plan.bn, "bk": plan.bk,
-                "dft_bt": plan.dft_bt,
+                "dft_bt": plan.dft_bt, "overlap": plan.overlap,
                 "us_per_call": cfg.us_per_call if cfg else None,
                 "source": cfg.source if cfg else "unmeasured",
             }
@@ -289,7 +295,8 @@ def plan_network(layers: Sequence[NetworkConv], *, backend: str = "auto",
                  three_m: bool = True, compute_dtype=None,
                  data_axis: str = "data", model_axis: str = "model",
                  replicate_kernel_transform: bool = False,
-                 spectrum: str = "auto") -> NetworkPlan:
+                 spectrum: str = "auto",
+                 overlap: str = "off") -> NetworkPlan:
     """Resolve every conv layer of a model in one planning pass.
 
     All layers share the network-wide knobs given here (backend, schedule,
@@ -311,7 +318,7 @@ def plan_network(layers: Sequence[NetworkConv], *, backend: str = "auto",
                   three_m=three_m, compute_dtype=compute_dtype,
                   data_axis=data_axis, model_axis=model_axis,
                   replicate_kernel_transform=replicate_kernel_transform,
-                  spectrum=spectrum)
+                  spectrum=spectrum, overlap=overlap)
     plans = collections.OrderedDict(
         (l.name, plan_conv(l.x_shape, l.k_shape, **l.plan_kwargs(shared)))
         for l in layers)

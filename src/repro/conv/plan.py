@@ -70,6 +70,12 @@ class ConvPlan:
     replicate_kernel_transform: bool = False
     epilogue: Epilogue = Epilogue()    # fused elementwise tail (stage 4)
     spectrum: str = "real"             # "real" (compact Hermitian) | "complex"
+    overlap: str = "off"               # "off" | "slab:<k>" sub-slab overlap
+
+    @property
+    def num_slabs(self) -> int:
+        """Batch sub-slab count of the overlapped execution (1 = off)."""
+        return _parse_overlap(self.overlap)
 
     # ---- execution --------------------------------------------------------
     def __call__(self, x, k, *, bias=None, residual=None):
@@ -229,7 +235,7 @@ class ConvPlan:
             lines.append(
                 f"  mesh axes: {self.data_axis}={n_data} "
                 f"x {self.model_axis}={n_model}, replicate_kernel_transform="
-                f"{self.replicate_kernel_transform}")
+                f"{self.replicate_kernel_transform}, overlap={self.overlap}")
         if self.bm or self.bn or self.bk or self.dft_bt:
             lines.append(f"  blocks bm={self.bm} bn={self.bn} bk={self.bk} "
                          f"dft_bt={self.dft_bt}")
@@ -379,10 +385,61 @@ def _auto_backend(spec: ConvSpec, three_m: bool) -> str:
     return "direct" if spec.direct_flops() <= fft else "fft-xla"
 
 
+# overlap="auto" picks "off" below this per-rank batch: slabbing a tiny
+# batch leaves each slab too small to amortize its collective's latency
+# (and k=2 on b_loc<4 would pipeline 1-row slabs).
+_AUTO_OVERLAP_MIN_B = 4
+
+
+def _parse_overlap(overlap) -> int:
+    """Sub-slab count encoded by a (resolved) overlap knob value:
+    ``"off"`` -> 1, ``"slab:<k>"`` -> k (k >= 2).  ``"auto"`` must be
+    resolved by the planner before it reaches here."""
+    if overlap == "off":
+        return 1
+    if isinstance(overlap, str) and overlap.startswith("slab:"):
+        try:
+            k = int(overlap[len("slab:"):])
+        except ValueError:
+            k = 0
+        if k >= 2:
+            return k
+    raise ValueError(
+        f"unknown overlap {overlap!r} (choose 'off', 'slab:<k>' with "
+        "k >= 2, or 'auto')")
+
+
+def _resolve_overlap(overlap, spec, sched, be, backend, schedule, mesh,
+                     data_axis) -> str:
+    """Validate + normalize the overlap knob against the resolved
+    (backend, schedule, mesh): ``"auto"`` picks ``"slab:2"`` on sharded
+    pipelines with enough per-rank batch (else ``"off"``), and explicit
+    slab counts are clamped once to the per-rank batch so every slab is
+    non-empty (``"slab:1"`` never exists — it normalizes to ``"off"``)."""
+    sharded_pipeline = sched.requires_mesh and be.pipeline_factory is not None
+    b_loc = 0
+    if sharded_pipeline:
+        n_data = mesh.shape[data_axis]
+        b_loc = (spec.B + (-spec.B) % n_data) // n_data
+    if overlap == "auto":
+        return "slab:2" if sharded_pipeline \
+            and b_loc >= _AUTO_OVERLAP_MIN_B else "off"
+    num_slabs = _parse_overlap(overlap)
+    if num_slabs == 1:
+        return "off"
+    if not sharded_pipeline:
+        raise ValueError(
+            f"overlap={overlap!r} requires a sharded stage-pipeline "
+            f"schedule (backend {backend!r} / schedule {schedule!r} has "
+            "no boundary collectives to overlap); use overlap='off'")
+    num_slabs = min(num_slabs, b_loc)
+    return f"slab:{num_slabs}" if num_slabs > 1 else "off"
+
+
 def _resolve(x_shape, k_shape, padding, delta, backend, schedule, mesh,
              three_m, bm, bn, bk, dft_bt, compute_dtype, data_axis,
              model_axis, replicate_kernel_transform, epilogue,
-             spectrum) -> ConvPlan:
+             spectrum, overlap="off") -> ConvPlan:
     _, _, kh, kw = k_shape
     if spectrum == "auto":
         spectrum = "real"    # compact Hermitian layout is the default path
@@ -442,12 +499,32 @@ def _resolve(x_shape, k_shape, padding, delta, backend, schedule, mesh,
             f"spectrum='complex' (the full-spectrum twin) only applies to "
             f"the FFT stage pipelines; backend {backend!r} has no spectrum")
 
+    # -- overlap (comm/compute-overlapped sub-slab execution) ---------------
+    overlap = _resolve_overlap(overlap, spec, sched, be, backend, schedule,
+                               mesh, data_axis)
+    num_slabs = _parse_overlap(overlap)
+    if num_slabs > 1 and backend == "fft-pallas":
+        # Pin the Pallas CGEMM blocks ONCE against the smallest sub-slab's
+        # geometry so every slab shares one block config — per-slab
+        # resolution would re-pad the small slabs on every call (certified
+        # by the analyzer's overlap-uniform-blocks invariant).  Explicit
+        # caller pins pass through resolve_blocks verbatim.
+        from repro.kernels.cgemm.ops import resolve_blocks
+        n_data = mesh.shape[data_axis]
+        n_model = mesh.shape[model_axis]
+        b_loc = (spec.B + (-spec.B) % n_data) // n_data
+        c_pad = spec.C + (-spec.C) % n_model
+        co_pad = spec.Cout + (-spec.Cout) % n_model
+        m_min = (b_loc // num_slabs) * spec.n_tiles
+        k_dim = c_pad if schedule == "nfft" else max(1, c_pad // n_model)
+        bm, bn, bk = resolve_blocks(m_min, co_pad, k_dim, bm, bn, bk)
+
     return ConvPlan(spec=spec, backend=backend, schedule=schedule,
                     padding=padding, three_m=three_m, bm=bm, bn=bn, bk=bk,
                     dft_bt=dft_bt, compute_dtype=compute_dtype, mesh=mesh,
                     data_axis=data_axis, model_axis=model_axis,
                     replicate_kernel_transform=replicate_kernel_transform,
-                    epilogue=epilogue, spectrum=spectrum)
+                    epilogue=epilogue, spectrum=spectrum, overlap=overlap)
 
 
 def plan_conv(x_shape, k_shape, *, padding=0, delta: int = 16,
@@ -458,6 +535,7 @@ def plan_conv(x_shape, k_shape, *, padding=0, delta: int = 16,
               replicate_kernel_transform: bool = False,
               epilogue: Optional[Epilogue] = None,
               spectrum: str = "auto",
+              overlap: str = "off",
               cache: bool = True) -> ConvPlan:
     """Create (or fetch from the plan cache) a ``ConvPlan``.
 
@@ -499,6 +577,16 @@ def plan_conv(x_shape, k_shape, *, padding=0, delta: int = 16,
         ``"complex"`` is the full-spectrum twin (measurement baseline).
         With ``backend="tuned"`` and ``spectrum="auto"`` the tuner picks
         per geometry.
+      overlap: comm/compute-overlapped execution for the sharded
+        schedules.  ``"slab:<k>"`` splits the per-rank batch into k
+        sub-slabs inside the shard_map body and double-buffers, so the
+        boundary collective of slab i+1 overlaps the hot cgemm of slab i
+        (requires the async-collective / latency-hiding XLA flags —
+        ``repro.launch.env``).  ``"auto"`` picks ``"slab:2"`` on sharded
+        pipelines with per-rank batch >= 4, else ``"off"``; slab counts
+        are clamped to the per-rank batch.  ``"off"`` (default) is the
+        sequential path.  With ``backend="tuned"`` and ``overlap="auto"``
+        the tuner measures the overlap axis.
       cache: memoize the plan under its argument key (bounded LRU, see
         ``plan_cache_capacity``).
 
@@ -527,12 +615,14 @@ def plan_conv(x_shape, k_shape, *, padding=0, delta: int = 16,
                 compute_dtype=compute_dtype, data_axis=data_axis,
                 model_axis=model_axis,
                 replicate_kernel_transform=replicate_kernel_transform,
-                spectrum=spectrum)
+                spectrum=spectrum, overlap=overlap)
             backend = tuned.backend
             if schedule == "auto":
                 schedule = tuned.schedule
             if spectrum == "auto":
                 spectrum = tuned.spectrum
+            if overlap == "auto":
+                overlap = tuned.overlap
             # explicit caller overrides beat tuned blocks
             bm = bm if bm is not None else tuned.bm
             bn = bn if bn is not None else tuned.bn
@@ -543,7 +633,7 @@ def plan_conv(x_shape, k_shape, *, padding=0, delta: int = 16,
     key = (x_shape, k_shape, padding, delta, backend, schedule,
            _mesh_cache_key(mesh), three_m, bm, bn, bk, dft_bt,
            compute_dtype, data_axis, model_axis,
-           replicate_kernel_transform, epilogue, spectrum)
+           replicate_kernel_transform, epilogue, spectrum, overlap)
     if cache:
         with _cache_lock:
             plan = _plan_cache.get(key)
@@ -554,7 +644,7 @@ def plan_conv(x_shape, k_shape, *, padding=0, delta: int = 16,
     plan = _resolve(x_shape, k_shape, padding, delta, backend, schedule,
                     mesh, three_m, bm, bn, bk, dft_bt, compute_dtype,
                     data_axis, model_axis, replicate_kernel_transform,
-                    epilogue, spectrum)
+                    epilogue, spectrum, overlap)
     if cache:
         with _cache_lock:
             _cache_misses += 1

@@ -66,7 +66,7 @@ def _shrink_block(dim, block):
     return min(block, fitted)
 
 
-def resolve_blocks(M, N, C, bm=None, bn=None, bk=None):
+def resolve_blocks(M, N, C, bm=None, bn=None, bk=None, slabs: int = 1):
     """Merge explicit block overrides over the heuristic defaults.
 
     ``None`` means "use the default", shrunk to fit the dim (see
@@ -74,10 +74,20 @@ def resolve_blocks(M, N, C, bm=None, bn=None, bk=None):
     values are honored verbatim and must be positive ints (operands are
     zero-padded up to block multiples, so any positive edge is legal —
     the autotuner decides what's *fast*).
+
+    ``slabs > 1`` resolves for comm/compute-overlapped execution where the
+    M axis is subdivided into that many batch sub-slabs: the default bm is
+    shrunk against the *smallest* sub-slab's rows, so ONE block config
+    (clamped once at plan time) covers every slab — per-slab re-resolution
+    would pick a bigger block for the larger slabs and re-pad the smaller
+    ones on every call.
     """
+    if isinstance(slabs, bool) or not isinstance(slabs, int) or slabs < 1:
+        raise ValueError(f"slabs must be a positive int, got {slabs!r}")
+    m_fit = max(1, M // slabs)            # smallest sub-slab's row count
     resolved = []
-    for name, v, dim, d in zip(("bm", "bn", "bk"), (bm, bn, bk), (M, N, C),
-                               _default_blocks(M, N, C)):
+    for name, v, dim, d in zip(("bm", "bn", "bk"), (bm, bn, bk),
+                               (m_fit, N, C), _default_blocks(m_fit, N, C)):
         if v is None:
             v = _shrink_block(dim, d)
         if isinstance(v, bool) or not isinstance(v, int) or v <= 0:

@@ -26,7 +26,7 @@ def _pad_tiles(x, bt):
     return x
 
 
-def resolve_bt(n: int, bt=None) -> int:
+def resolve_bt(n: int, bt=None, slabs: int = 1) -> int:
     """Merge an explicit tile-batch block override over ``DEFAULT_BT``.
 
     ``None`` means "use the default"; explicit values must be positive
@@ -37,15 +37,23 @@ def resolve_bt(n: int, bt=None) -> int:
     steps, so padding is applied at most once for the whole batch instead
     of up to ``bt - 1`` ghost tiles per call (n=1000 gets bt=250, not a
     256-block padded to 1024).
+
+    ``slabs > 1`` resolves for overlapped (sub-slab) execution: ``n`` is
+    the un-slabbed tile count and the block is fitted to the *smallest*
+    sub-slab, so one plan-time resolution covers every per-slab call
+    without re-padding (mirrors ``cgemm.resolve_blocks(slabs=...)``).
     """
+    if isinstance(slabs, bool) or not isinstance(slabs, int) or slabs < 1:
+        raise ValueError(f"slabs must be a positive int, got {slabs!r}")
+    n_fit = max(1, n // slabs)
     if bt is None:
-        steps = max(1, math.ceil(n / DEFAULT_BT))
-        return max(1, math.ceil(n / steps))
+        steps = max(1, math.ceil(n_fit / DEFAULT_BT))
+        return max(1, math.ceil(n_fit / steps))
     if isinstance(bt, bool) or not isinstance(bt, int) or bt <= 0:
         raise ValueError(
             f"dft_tile block override bt must be a positive int or None, "
             f"got {bt!r}")
-    return min(bt, max(n, 1))
+    return min(bt, max(n_fit, 1))
 
 
 @functools.partial(jax.jit, static_argnames=("delta", "bt", "interpret"))

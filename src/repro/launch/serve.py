@@ -51,7 +51,7 @@ def serve_convnet(args):
     layers = network_convs(scale, args.batch)
     backend = "tuned" if args.tune else args.conv_backend
     t0 = time.time()
-    net = plan_network(layers, backend=backend)
+    net = plan_network(layers, backend=backend, overlap=args.overlap)
     if args.tune:
         # the tuned planning sweep IS the cache warm-up: every distinct
         # layer geometry was measured (or served from the persistent
@@ -63,7 +63,8 @@ def serve_convnet(args):
                 else f"{r['us_per_call']:.0f}us"
             print(f"  {name}: {r['backend']}/{r['schedule']} "
                   f"bm={r['bm']} bn={r['bn']} bk={r['bk']} "
-                  f"dft_bt={r['dft_bt']} {us} [{r['source']}]")
+                  f"dft_bt={r['dft_bt']} overlap={r['overlap']} "
+                  f"{us} [{r['source']}]")
     print(net.describe())
     if args.analyze:
         prof = net.analyze().raise_if_failed()
@@ -118,6 +119,10 @@ def main(argv=None):
                     help="serve the paper's conv trunk via plan_network "
                          "instead of an LM arch")
     ap.add_argument("--conv-backend", default="fft-xla")
+    ap.add_argument("--overlap", default="off",
+                    help="conv sub-slab comm/compute overlap: off | "
+                         "slab:<k> | auto (sharded schedules only; see "
+                         "docs/conv_api.md)")
     ap.add_argument("--tune", action="store_true",
                     help="autotune every distinct conv geometry (measured, "
                          "persistently cached) to warm the tuning cache "

@@ -193,6 +193,8 @@ def test_network_profile_aggregates_and_certifies():
 @pytest.mark.parametrize("mode", VIOLATION_MODES)
 def test_seeded_violation_is_caught(mode):
     kw = {"compute_dtype": jnp.bfloat16} if mode == "skip-cast" else {}
+    if mode == "overlap-oversend":
+        kw["overlap"] = "slab:2"       # only overlapped plans hit the slab ops
     with seeded_violation(mode):
         p = analyze(plan_conv((2, 4, 22, 22), (4, 4, 3, 3), padding=1,
                               backend="fft-xla", schedule="nfft",
