@@ -5,11 +5,18 @@ alongside the timing without breaking plain-float consumers:
 
     {"table1/Vconv1.2": 123.4,                          # legacy: bare float
      "autotune/conv3": {"us_per_call": 88.1,            # rich: dict
-                        "config": {"backend": "fft-xla", ...}}}
+                        "config": {"backend": "fft-xla", ...}},
+     "serve/b4/p99": {"us_per_call": 910.0,             # serving SLO row
+                      "percentiles": {"p50": 618.0, "p99": 910.0},
+                      "config": {"mode": "bucketed", ...}}}
 
-``normalize`` maps both onto ``{name: {"us_per_call": float,
-"config": dict}}``; every consumer (CI smoke assertion, the perf-regression
-gate, ``update_baseline``) goes through it.
+``normalize`` maps all of them onto ``{name: {"us_per_call": float,
+"config": dict}}`` — plus an optional ``percentiles`` key (str -> float)
+preserved verbatim when present, so serving-latency rows round-trip
+through ``compare_baseline`` / ``update_baseline`` while plain-float
+consumers keep reading ``us_per_call`` alone.  Every consumer (CI smoke
+assertion, the perf-regression gate, ``update_baseline``) goes through
+it.
 """
 from __future__ import annotations
 
@@ -17,8 +24,9 @@ import json
 
 
 def normalize_entry(name: str, value):
-    """One entry -> ``{"us_per_call": float, "config": dict}`` (raises
-    ``ValueError`` on anything else)."""
+    """One entry -> ``{"us_per_call": float, "config": dict}`` plus an
+    optional tolerated ``percentiles`` dict (raises ``ValueError`` on
+    anything else)."""
     if isinstance(value, bool):
         raise ValueError(f"bench entry {name!r}: bool is not a timing")
     if isinstance(value, (int, float)):
@@ -38,11 +46,23 @@ def normalize_entry(name: str, value):
             raise ValueError(
                 f"bench entry {name!r}: config must be a dict, "
                 f"got {type(config).__name__}")
-        return {"us_per_call": float(us), "config": config}
+        out = {"us_per_call": float(us), "config": config}
+        pcts = value.get("percentiles")
+        if pcts is not None:
+            if not isinstance(pcts, dict) or not all(
+                    isinstance(v, (int, float))
+                    and not isinstance(v, bool)
+                    for v in pcts.values()):
+                raise ValueError(
+                    f"bench entry {name!r}: percentiles must map names "
+                    f"to numbers, got {pcts!r}")
+            out["percentiles"] = {str(k): float(v)
+                                  for k, v in pcts.items()}
+        return out
     raise ValueError(
         f"bench entry {name!r}: expected float or "
-        f"{{'us_per_call': float, 'config': {{...}}}}, "
-        f"got {type(value).__name__}")
+        f"{{'us_per_call': float, 'percentiles'?: {{...}}, "
+        f"'config': {{...}}}}, got {type(value).__name__}")
 
 
 def normalize(data: dict) -> dict:

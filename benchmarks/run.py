@@ -94,6 +94,7 @@ def main(argv=None) -> dict:
 
     rows = parse_csv_rows(tee.captured.getvalue())
     rows.update(_overlap_rows(quick=args.quick))
+    rows.update(_serve_rows(quick=args.quick))
     if args.tuned:
         rows.update(_tuned_rows(quick=args.quick))
     if args.json_out:
@@ -260,6 +261,70 @@ def _overlap_rows(quick: bool = True) -> dict:
                            else int(ov.split(":")[1]),
                            "ndev": ndev, "batch": batch}}
     return out
+
+
+def _serve_rows(quick: bool = True) -> dict:
+    """Serving-SLO rows: the continuous-batching engine
+    (``repro.launch.batcher``) on a reproducible ragged burst trace,
+    emitting ``serve/<bucket>/{p50,p99,occupancy}`` in the dict entry
+    form (percentiles riding the tolerated ``percentiles`` field) so
+    the baseline gate holds serving latency, not just kernel time."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.conv import Epilogue, NetworkConv
+    from repro.launch.batcher import (
+        BucketPolicy, ServeEngine, run_trace, synthetic_trace)
+
+    max_batch = 4 if quick else 8
+    n_requests = 16 if quick else 32
+    ep = Epilogue(bias=True, activation="relu")
+
+    def make_layers(b):
+        return (
+            NetworkConv("s1", (b, 16, 32, 32), (32, 16, 3, 3),
+                        padding=1, epilogue=ep),
+            NetworkConv("s2", (b, 32, 32, 32), (32, 32, 3, 3),
+                        padding=1, epilogue=ep),
+        )
+
+    rng = np.random.default_rng(0)
+
+    def init(shape, s=0.05):
+        return jnp.asarray(s * rng.standard_normal(shape), jnp.float32)
+
+    kernels = {l.name: init(l.k_shape) for l in make_layers(1)}
+    biases = {l.name: init((l.k_shape[0],)) for l in make_layers(1)}
+
+    def forward(prepared, x):
+        for name in prepared:
+            x = prepared[name](x, bias=biases[name])
+        return x
+
+    engine = ServeEngine(make_layers, kernels,
+                         policy=BucketPolicy(max_batch=max_batch),
+                         forward=forward, timing="per-batch",
+                         collect_results=False, backend="fft-xla")
+    trace = synthetic_trace(n_requests=n_requests, max_batch=max_batch,
+                            rate_rps=1.0, seed=0)
+    inputs = {}
+
+    def make_input(b, image):
+        if b not in inputs:
+            inputs[b] = init((b, 16, 32, 32), 1.0)
+        return inputs[b]
+
+    rep = run_trace(engine, trace, make_input=make_input,
+                    realtime=False)        # deterministic burst replay
+    assert rep["plan_cache_misses_after_warmup"] == 0, \
+        "serve bench planned on the hot path"
+    rows = engine.bench_rows(prefix="serve")
+    print("# serve: continuous-batching engine, ragged burst trace "
+          f"(n={n_requests}, max_batch={max_batch}) — "
+          "name,us_per_call,metric")
+    for name in sorted(rows):
+        metric = name.rsplit("/", 1)[1]
+        print(f"{name},{rows[name]['us_per_call']:.1f},{metric}")
+    return rows
 
 
 def _conv_roofline_rows():

@@ -1,0 +1,81 @@
+"""Continuous batching: the shape-bucketed serve engine end to end.
+
+    PYTHONPATH=src python examples/serve_batcher.py
+
+Ragged requests (every client its own batch size) hit a small fixed set
+of padded batch buckets, each planned (``plan_network``) + prepared
+(``prepare_all``) + jit-compiled ONCE at startup. The drain loop
+FIFO-packs the queue into bucket batches, pads, executes, unpads per
+request — zero re-planning or re-tracing on the hot path, certified by
+the plan-cache miss counter in the report.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.conv import Epilogue, NetworkConv
+from repro.launch.batcher import (
+    BucketPolicy, RequestTooLarge, ServeEngine, run_trace,
+    synthetic_trace,
+)
+
+rng = np.random.default_rng(0)
+
+
+def init(shape, s=0.05):
+    return jnp.asarray(s * rng.standard_normal(shape), jnp.float32)
+
+
+# A two-layer conv trunk, shaped per bucket batch size.
+def make_layers(batch):
+    ep = Epilogue(bias=True, activation="relu")
+    return [
+        NetworkConv("c1", (batch, 8, 32, 32), (16, 8, 3, 3), padding=1,
+                    epilogue=ep),
+        NetworkConv("c2", (batch, 16, 32, 32), (16, 16, 3, 3), padding=1,
+                    epilogue=ep),
+    ]
+
+
+kernels = {"c1": init((16, 8, 3, 3)), "c2": init((16, 16, 3, 3))}
+biases = {"c1": init((16,)), "c2": init((16,))}
+
+
+def forward(prepared, x):
+    for name in prepared:
+        x = prepared[name](x, bias=biases[name])
+    return x
+
+
+policy = BucketPolicy(max_batch=4)            # buckets (1, 2, 4)
+engine = ServeEngine(make_layers, kernels, policy=policy,
+                     forward=forward, window_s=2e-3)
+print(f"buckets: {policy.batch_buckets()} "
+      f"(dedupe: {engine.bucket_report()['n_distinct_plans']} distinct "
+      f"plans for {engine.bucket_report()['n_layer_plans']} layer slots)")
+
+# Oversize requests are rejected up front, not padded into oblivion.
+try:
+    engine.submit(jnp.zeros((9, 8, 32, 32), jnp.float32))
+except RequestTooLarge as e:
+    print(f"rejected: {e}")
+
+# Replay a ragged Poisson trace (burst mode: deterministic backlog).
+trace = synthetic_trace(n_requests=16, max_batch=4, rate_rps=50.0, seed=0)
+rep = run_trace(engine, trace, realtime=False,
+                make_input=lambda b, img: init((b, 8, 32, 32), 1.0))
+
+print(f"served {rep['n_requests']} requests in {rep['wall_s']:.3f}s "
+      f"({rep['throughput_rows_s']:.0f} rows/s), "
+      f"p50={rep['p50_us'] / 1e3:.1f}ms p99={rep['p99_us'] / 1e3:.1f}ms")
+for label, b in sorted(rep["buckets"].items()):
+    print(f"  {label}: {b['n_requests']} requests in {b['n_batches']} "
+          f"batches, occupancy {b['occupancy']:.2f}")
+assert rep["plan_cache_misses_after_warmup"] == 0   # hot path never plans
+
+# A weight update is ONE invalidation sweep across every bucket.
+engine.update_weights({k: v * 2.0 for k, v in kernels.items()},
+                      weights_version=1)
+rid = engine.submit(init((3, 8, 32, 32), 1.0))
+engine.drain(force=True)
+print(f"after weight update: result {tuple(engine.results[rid].shape)} "
+      f"(request rows preserved through pad/unpad)")

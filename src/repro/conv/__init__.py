@@ -21,6 +21,7 @@ from repro.conv.registry import backend_schedule_pairs
 from repro.conv.stages import stage_trace
 from repro.conv.netplan import (
     NetworkConv, NetworkPlan, NetworkProfile, PreparedNetwork, plan_network,
+    plan_network_buckets, prepare_network_buckets, bucket_report,
 )
 from repro.conv.analyze import (
     PlanProfile, CheckReport, Violation, analyze, register_invariant,
@@ -35,7 +36,8 @@ _backends.register_builtin()
 __all__ = [
     "ConvPlan", "PreparedConv", "plan_conv", "conv2d", "Epilogue",
     "NetworkConv", "NetworkPlan", "NetworkProfile", "PreparedNetwork",
-    "plan_network",
+    "plan_network", "plan_network_buckets", "prepare_network_buckets",
+    "bucket_report",
     "plan_cache_info", "clear_plan_cache", "plan_cache_capacity",
     "prepared_cache_info", "clear_prepared_cache",
     "stage_trace",

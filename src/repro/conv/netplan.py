@@ -323,3 +323,61 @@ def plan_network(layers: Sequence[NetworkConv], *, backend: str = "auto",
         (l.name, plan_conv(l.x_shape, l.k_shape, **l.plan_kwargs(shared)))
         for l in layers)
     return NetworkPlan(plans=plans)
+
+
+# --------------------------------------------------------------------------
+# Per-bucket planning (the serving batcher's startup sweep)
+# --------------------------------------------------------------------------
+
+def plan_network_buckets(make_layers, batches: Sequence[int],
+                         **plan_kwargs) -> "collections.OrderedDict":
+    """One ``NetworkPlan`` per padded batch-size bucket.
+
+    ``make_layers(batch)`` returns the ``NetworkConv`` sequence for one
+    padded input shape; every bucket resolves through the shared plan
+    cache, so buckets that collapse onto the same geometries (and repeat
+    sweeps at process restart) share frozen ``ConvPlan`` objects.  This
+    is the startup sweep of the continuous-batching serve engine
+    (``repro.launch.batcher``) — with ``backend="tuned"`` it is also the
+    per-bucket tuning sweep.
+    """
+    dupes = [b for b, c in collections.Counter(batches).items() if c > 1]
+    if dupes:
+        raise ValueError(f"duplicate bucket batch sizes: {dupes}")
+    return collections.OrderedDict(
+        (int(b), plan_network(make_layers(int(b)), **plan_kwargs))
+        for b in batches)
+
+
+def prepare_network_buckets(nets: Mapping[int, NetworkPlan],
+                            params: Mapping[str, Any], *,
+                            weights_version=None
+                            ) -> "collections.OrderedDict":
+    """``prepare_all`` for every bucket under ONE ``weights_version``:
+    each distinct (plan, kernel) pair transforms once — buckets sharing
+    a geometry hit the prepared cache — and a weight update is one
+    sweep re-preparing all buckets under the next version."""
+    return collections.OrderedDict(
+        (b, net.prepare_all(params, weights_version=weights_version))
+        for b, net in nets.items())
+
+
+def bucket_report(nets: Mapping[int, NetworkPlan]) -> dict:
+    """Cross-bucket dedupe and cost summary: how many *distinct* frozen
+    plans the bucket set resolves to (the shared-cache dedupe the serve
+    engine relies on), plus per-bucket layer counts and FLOPs/pass."""
+    distinct = {id(p) for net in nets.values()
+                for p in net.plans.values()}
+    per_bucket = {
+        b: {"n_layers": len(net),
+            "flops_per_pass": sum(p.flops() for p in net.plans.values())}
+        for b, net in nets.items()}
+    total_layers = sum(len(net) for net in nets.values())
+    return {
+        "n_buckets": len(nets),
+        "n_layer_plans": total_layers,
+        "n_distinct_plans": len(distinct),
+        "dedupe_ratio": (len(distinct) / total_layers if total_layers
+                         else 1.0),
+        "buckets": per_bucket,
+    }

@@ -25,11 +25,29 @@ def test_normalize_accepts_float_and_dict_entries():
     assert norm["bare_dict"] == {"us_per_call": 9.0, "config": {}}
 
 
+def test_normalize_preserves_percentiles_field():
+    data = {"serve/b4/p99": {
+        "us_per_call": 910.0,
+        "percentiles": {"p50": 618, "p99": 910.0},
+        "config": {"mode": "bucketed", "replicas": 1}}}
+    norm = bench_schema.normalize(data)
+    entry = norm["serve/b4/p99"]
+    assert entry["us_per_call"] == 910.0
+    assert entry["percentiles"] == {"p50": 618.0, "p99": 910.0}
+    assert entry["config"]["mode"] == "bucketed"
+    # rows without percentiles stay percentile-free (no key injection)
+    assert "percentiles" not in bench_schema.normalize(
+        {"a": {"us_per_call": 1.0}})["a"]
+
+
 @pytest.mark.parametrize("bad", [
     {"x": "fast"}, {"x": True}, {"x": [1, 2]},
     {"x": {"config": {}}},                       # missing us_per_call
     {"x": {"us_per_call": "slow"}},
     {"x": {"us_per_call": 1.0, "config": 3}},
+    {"x": {"us_per_call": 1.0, "percentiles": [50, 99]}},
+    {"x": {"us_per_call": 1.0, "percentiles": {"p50": "slow"}}},
+    {"x": {"us_per_call": 1.0, "percentiles": {"p50": True}}},
     "not a dict",
 ])
 def test_normalize_rejects_malformed(bad):
@@ -78,6 +96,42 @@ def test_gate_tolerance_is_a_knob(tmp_path):
     cur = _write(tmp_path / "cur.json", {"a": 300.0})
     assert compare_baseline.main(
         ["--baseline", base, "--current", cur, "--tolerance", "4"]) == 0
+
+
+def _serve_row(us):
+    return {"us_per_call": us,
+            "percentiles": {"p50": us / 2.0, "p99": us},
+            "config": {"mode": "bucketed", "replicas": 1}}
+
+
+def test_gate_catches_serve_p99_blowup(tmp_path, capsys):
+    """The SLO gate: a synthetic 10x p99 blowup on a serve row must
+    fail the baseline comparison (percentiles ride along untouched)."""
+    base = _write(tmp_path / "base.json",
+                  {"serve/b4/p99": _serve_row(1000.0),
+                   "serve/b4/p50": _serve_row(600.0)})
+    cur = _write(tmp_path / "cur.json",
+                 {"serve/b4/p99": _serve_row(10000.0),
+                  "serve/b4/p50": _serve_row(600.0)})
+    assert compare_baseline.main(
+        ["--baseline", base, "--current", cur, "--tolerance", "2.5"]) == 1
+    captured = capsys.readouterr()
+    assert "serve/b4/p99" in captured.out and "REGRESSED" in captured.out
+    # within tolerance the same rows pass
+    ok = _write(tmp_path / "ok.json",
+                {"serve/b4/p99": _serve_row(1200.0),
+                 "serve/b4/p50": _serve_row(600.0)})
+    assert compare_baseline.main(
+        ["--baseline", base, "--current", ok, "--tolerance", "2.5"]) == 0
+
+
+def test_update_baseline_round_trips_percentiles(tmp_path):
+    src = _write(tmp_path / "cur.json", {"serve/b2/p99": _serve_row(80.0)})
+    out = tmp_path / "BENCH_baseline.json"
+    assert update_baseline.main(["--from", src, "--out", str(out)]) == 0
+    data = json.loads(out.read_text())
+    assert data["serve/b2/p99"]["percentiles"] == {"p50": 40.0,
+                                                   "p99": 80.0}
 
 
 def test_gate_min_us_floor_skips_jitter(tmp_path, capsys):
