@@ -95,6 +95,7 @@ def main(argv=None) -> dict:
     rows = parse_csv_rows(tee.captured.getvalue())
     rows.update(_overlap_rows(quick=args.quick))
     rows.update(_serve_rows(quick=args.quick))
+    rows.update(_coldstart_rows(quick=args.quick))
     if args.tuned:
         rows.update(_tuned_rows(quick=args.quick))
     if args.json_out:
@@ -260,6 +261,94 @@ def _overlap_rows(quick: bool = True) -> dict:
                            "num_slabs": 1 if ov == "off"
                            else int(ov.split(":")[1]),
                            "ndev": ndev, "batch": batch}}
+    return out
+
+
+_COLDSTART_WORKER = r"""
+import sys, json
+import jax.numpy as jnp, numpy as np
+from repro.conv import Epilogue, NetworkConv
+from repro.launch.batcher import BucketPolicy, ServeEngine
+
+spec = json.loads(sys.argv[1])
+ep = Epilogue(bias=True, activation="relu")
+
+def make_layers(b):
+    return (
+        NetworkConv("s1", (b, 16, 32, 32), (32, 16, 3, 3),
+                    padding=1, epilogue=ep),
+        NetworkConv("s2", (b, 32, 32, 32), (32, 32, 3, 3),
+                    padding=1, epilogue=ep),
+    )
+
+rng = np.random.default_rng(0)
+def init(shape, s=0.05):
+    return jnp.asarray(s * rng.standard_normal(shape), jnp.float32)
+kernels = {l.name: init(l.k_shape) for l in make_layers(1)}
+biases = {l.name: init((l.k_shape[0],)) for l in make_layers(1)}
+
+def forward(prepared, x):
+    for name in prepared:
+        x = prepared[name](x, bias=biases[name])
+    return x
+
+engine = ServeEngine(
+    make_layers, kernels, policy=BucketPolicy(max_batch=spec["max_batch"]),
+    forward=forward, timing="per-batch", collect_results=False,
+    backend="fft-xla",
+    load_plans=spec["artifact"] if spec["mode"] == "aot" else None)
+assert engine.plan_source == spec["mode"], engine.plan_source
+if spec["mode"] == "live":
+    engine.export_plans(spec["artifact"])
+print("RESULT" + json.dumps({"startup_s": engine.startup_s}))
+"""
+
+
+def _coldstart_rows(quick: bool = True) -> dict:
+    """Fleet cold-start: ServeEngine startup wall-time (plan + prepare +
+    compile + warm, measured inside the constructor) in a FRESH process,
+    live-planned vs rehydrated from the AOT plan artifact the live
+    worker exported (``repro.conv.export``).  Two subprocesses so both
+    sides pay real process cold-start — no warm jax caches leak in from
+    the parent."""
+    import os
+    import subprocess
+    import tempfile
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    max_batch = 4 if quick else 8
+    out = {}
+    print("# coldstart: ServeEngine startup in a fresh process, live "
+          "plan+prepare+compile vs AOT plan-artifact rehydration — "
+          "name,us_per_call,source")
+    with tempfile.TemporaryDirectory() as td:
+        artifact = os.path.join(td, "plans.rpa")
+        for mode in ("live", "aot"):
+            spec = {"mode": mode, "artifact": artifact,
+                    "max_batch": max_batch}
+            r = subprocess.run(
+                [sys.executable, "-c", _COLDSTART_WORKER,
+                 json.dumps(spec)],
+                env=env, capture_output=True, text=True, timeout=1200)
+            if r.returncode != 0:
+                print(f"# coldstart/{mode}: worker failed: "
+                      f"{r.stderr[-500:]}")
+                return out
+            line = [ln for ln in r.stdout.splitlines()
+                    if ln.startswith("RESULT")][0]
+            s = json.loads(line[len("RESULT"):])["startup_s"]
+            print(f"coldstart/{mode},{s * 1e6:.1f},{mode}")
+            out[f"coldstart/{mode}"] = {
+                "us_per_call": float(s) * 1e6,
+                "config": {"source": mode, "max_batch": max_batch,
+                           "n_layers": 2, "artifact": "plans.rpa"}}
+    live = out.get("coldstart/live", {}).get("us_per_call")
+    aot = out.get("coldstart/aot", {}).get("us_per_call")
+    if live is not None and aot is not None and not aot < live:
+        raise SystemExit(
+            f"coldstart: AOT rehydration ({aot / 1e6:.2f}s) not faster "
+            f"than live planning ({live / 1e6:.2f}s)")
     return out
 
 

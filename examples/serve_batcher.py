@@ -4,7 +4,7 @@
 
 Ragged requests (every client its own batch size) hit a small fixed set
 of padded batch buckets, each planned (``plan_network``) + prepared
-(``prepare_all``) + jit-compiled ONCE at startup. The drain loop
+(``NetworkPlan.prepare``) + jit-compiled ONCE at startup. The drain loop
 FIFO-packs the queue into bucket batches, pads, executes, unpads per
 request — zero re-planning or re-tracing on the hot path, certified by
 the plan-cache miss counter in the report.

@@ -105,13 +105,13 @@ def main():
     # prepared once (keyed by the final step as weights_version); every
     # eval batch skips stage 2 and runs the fused epilogue on the slab.
     net = eval_network(args.batch)
-    prepared = net.prepare_all({"c1": params["c1"], "c2": params["c2"]},
+    prepared = net.prepare({"c1": params["c1"], "c2": params["c2"]},
                                weights_version=args.steps)
     b = image_batch(dc, 10_000)
     logits = forward_prepared(params, prepared, b["images"])
     acc = float(jnp.mean(jnp.argmax(logits, -1) == b["labels"]))
     # second sweep under the same version: pure prepared-cache hits
-    net.prepare_all({"c1": params["c1"], "c2": params["c2"]},
+    net.prepare({"c1": params["c1"], "c2": params["c2"]},
                     weights_version=args.steps)
     info = prepared_cache_info()
     print(f"held-out acc {acc:.2f} ({time.time()-t0:.1f}s) — trained via "

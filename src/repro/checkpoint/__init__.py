@@ -1,4 +1,8 @@
 from repro.checkpoint.store import (save, save_async, wait_pending,
-                                    latest_step, restore)
+                                    latest_step, restore,
+                                    save_plan_artifact, load_plan_artifact,
+                                    has_plan_artifact, plan_artifact_path)
 
-__all__ = ["save", "save_async", "wait_pending", "latest_step", "restore"]
+__all__ = ["save", "save_async", "wait_pending", "latest_step", "restore",
+           "save_plan_artifact", "load_plan_artifact", "has_plan_artifact",
+           "plan_artifact_path"]

@@ -1,15 +1,26 @@
 """Sharded, atomic, async checkpointing with elastic restore.
 
-Layout: <dir>/step_<N>/  leaf files ``<flat.key.path>.npy`` + ``meta.json``.
-Writes go to ``step_<N>.tmp`` then ``os.rename`` (atomic commit): a crash
-mid-save never corrupts the latest checkpoint — restart picks the newest
-*committed* step. ``save_async`` runs the serialisation on a worker thread so
-the train loop keeps stepping (the arrays are fetched to host first, which is
-the only synchronous part).
+Layout: <dir>/step_<N>/  leaf files ``leaf_<i>.npy`` (named by
+``meta.json``'s ``files`` map, keyed by ``jax.tree_util.keystr`` paths)
+plus ``meta.json``.  Writes go to ``step_<N>.tmp`` then ``os.rename``
+(atomic commit): a crash mid-save never corrupts the latest checkpoint —
+restart picks the newest *committed* step. ``save_async`` runs the
+serialisation on a worker thread so the train loop keeps stepping (the
+arrays are fetched to host first, which is the only synchronous part).
 
-Elastic restore: leaves are loaded as host arrays and ``jax.device_put`` with
-the *target* sharding, so a checkpoint taken on mesh A restores onto mesh B
-(different data-axis size, different device count) without conversion steps.
+Elastic restore: leaves are loaded as host arrays and ``jax.device_put``
+with the *target* sharding, so a checkpoint taken on mesh A restores onto
+mesh B (different data-axis size, different device count) without
+conversion steps.  Checkpoints written by the pre-``keystr`` format (no
+``files`` map in meta; keys joined from ``.key``/``.idx`` attributes) are
+still restorable.
+
+Exported plan artifacts (``repro.conv.export``) ride next to the
+weights: ``save_plan_artifact`` attaches one ``plans.rpa`` per committed
+step — one artifact per ``weights_version`` — and
+``load_plan_artifact`` rehydrates it on a fresh worker.  A weight update
+means a new step directory, i.e. a new artifact (the serve engine's
+``update_weights`` likewise drops any loaded artifact and re-plans).
 """
 from __future__ import annotations
 
@@ -22,17 +33,50 @@ import jax
 import numpy as np
 
 
-def _flatten(tree):
+def _legacy_key(path) -> str:
+    """Pre-keystr key derivation.  BUG (kept only to restore old
+    checkpoints): the ``str(p)`` fallback can collide distinct paths —
+    e.g. a dict key ``"a.b"`` flattens identically to nested ``a -> b``,
+    and path entry types that carry neither ``.key`` nor ``.idx`` all
+    stringify the same way."""
+    return ".".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def _flatten(tree, *, legacy: bool = False):
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = {}
     for path, leaf in flat:
-        key = ".".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
+        key = _legacy_key(path) if legacy else jax.tree_util.keystr(path)
+        if key in out:
+            raise ValueError(
+                f"checkpoint: two leaves flatten to the same key {key!r}")
         out[key] = leaf
     return out
 
 
-def save(ckpt_dir: str, step: int, tree, *, extra: dict | None = None):
+def _file_map(keys) -> dict:
+    """Injective key -> filename map (index-based: keystr paths may hold
+    arbitrary dict-key characters, so keys never become filenames)."""
+    return {k: f"leaf_{i:05d}.npy" for i, k in enumerate(sorted(keys))}
+
+
+def _write_step(tmp: str, host: dict, meta: dict) -> None:
+    files = meta["files"]
+    for k, v in host.items():
+        np.save(os.path.join(tmp, files[k]), v)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+
+
+def _make_meta(step: int, host: dict, extra, weights_version) -> dict:
+    return {"step": step, "format": 2, "keys": sorted(host),
+            "files": _file_map(host), "weights_version": weights_version,
+            "extra": extra or {}}
+
+
+def save(ckpt_dir: str, step: int, tree, *, extra: dict | None = None,
+         weights_version=None):
     """Synchronous atomic save of a pytree of (possibly sharded) arrays."""
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
@@ -42,11 +86,7 @@ def save(ckpt_dir: str, step: int, tree, *, extra: dict | None = None):
     os.makedirs(tmp)
     flat = _flatten(tree)
     host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
-    for k, v in host.items():
-        np.save(os.path.join(tmp, k + ".npy"), v)
-    meta = {"step": step, "keys": sorted(host), "extra": extra or {}}
-    with open(os.path.join(tmp, "meta.json"), "w") as f:
-        json.dump(meta, f)
+    _write_step(tmp, host, _make_meta(step, host, extra, weights_version))
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)           # atomic commit
@@ -56,11 +96,12 @@ def save(ckpt_dir: str, step: int, tree, *, extra: dict | None = None):
 _PENDING: list[threading.Thread] = []
 
 
-def save_async(ckpt_dir: str, step: int, tree, *, extra: dict | None = None):
+def save_async(ckpt_dir: str, step: int, tree, *, extra: dict | None = None,
+               weights_version=None):
     """Fetch to host synchronously, serialise+commit on a worker thread."""
     flat = _flatten(tree)
     host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
-    meta_extra = extra or {}
+    meta = _make_meta(step, host, extra, weights_version)
 
     def work():
         final = os.path.join(ckpt_dir, f"step_{step:08d}")
@@ -68,11 +109,7 @@ def save_async(ckpt_dir: str, step: int, tree, *, extra: dict | None = None):
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp, exist_ok=True)
-        for k, v in host.items():
-            np.save(os.path.join(tmp, k + ".npy"), v)
-        with open(os.path.join(tmp, "meta.json"), "w") as f:
-            json.dump({"step": step, "keys": sorted(host),
-                       "extra": meta_extra}, f)
+        _write_step(tmp, host, meta)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
@@ -105,18 +142,71 @@ def restore(ckpt_dir: str, step: int, target_tree, *, shardings=None):
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(d, "meta.json")) as f:
         meta = json.load(f)
-    flat_target = _flatten(target_tree)
-    flat_shard = _flatten(shardings) if shardings is not None else {}
+    legacy = "files" not in meta      # pre-keystr checkpoint layout
+    files = meta.get("files", {})
+
+    def fname(k):
+        return files[k] if not legacy else k + ".npy"
+
+    flat_target = _flatten(target_tree, legacy=legacy)
+    flat_shard = _flatten(shardings, legacy=legacy) \
+        if shardings is not None else {}
     loaded = {}
     for k in flat_target:
-        arr = np.load(os.path.join(d, k + ".npy"))
+        arr = np.load(os.path.join(d, fname(k)))
         if k in flat_shard and flat_shard[k] is not None:
             loaded[k] = jax.device_put(arr, flat_shard[k])
         else:
             loaded[k] = jax.numpy.asarray(arr)
     # unflatten via the target treedef
     paths, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
-    keys = [".".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                     for p in path) for path, _ in paths]
+    keys = [_legacy_key(path) if legacy else jax.tree_util.keystr(path)
+            for path, _ in paths]
     return jax.tree_util.tree_unflatten(treedef,
                                         [loaded[k] for k in keys]), meta
+
+
+# --------------------------------------------------------------------------
+# Exported plan artifacts next to weights (repro.conv.export)
+# --------------------------------------------------------------------------
+
+PLAN_ARTIFACT = "plans.rpa"
+
+
+def plan_artifact_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:08d}", PLAN_ARTIFACT)
+
+
+def has_plan_artifact(ckpt_dir: str, step: int) -> bool:
+    return os.path.exists(plan_artifact_path(ckpt_dir, step))
+
+
+def save_plan_artifact(ckpt_dir: str, step: int, net, params, *,
+                       weights_version=None) -> str:
+    """Attach an AOT-exported plan artifact to a *committed* checkpoint
+    step, so a fresh worker restoring these weights also skips the whole
+    plan/prepare/compile sweep.  ``net`` is a ``NetworkPlan`` /
+    ``BucketedNetworkPlan`` / label mapping; ``weights_version`` defaults
+    to the step (one artifact per weights version — a new step is a new
+    artifact)."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if not os.path.isdir(d):
+        raise FileNotFoundError(
+            f"no committed checkpoint step {step} under {ckpt_dir!r}; "
+            "save the weights first")
+    from repro.conv.export import export_network
+    wv = step if weights_version is None else weights_version
+    return export_network(net, plan_artifact_path(ckpt_dir, step),
+                          params=params, weights_version=wv)
+
+
+def load_plan_artifact(ckpt_dir: str, step: int, **load_kwargs):
+    """Rehydrate the plan artifact attached to a checkpoint step
+    (``repro.conv.export.load_network`` kwargs pass through)."""
+    p = plan_artifact_path(ckpt_dir, step)
+    if not os.path.exists(p):
+        raise FileNotFoundError(
+            f"checkpoint step {step} under {ckpt_dir!r} has no plan "
+            f"artifact ({PLAN_ARTIFACT})")
+    from repro.conv.export import load_network
+    return load_network(p, **load_kwargs)

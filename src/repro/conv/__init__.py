@@ -20,8 +20,13 @@ from repro.conv.plan import (
 from repro.conv.registry import backend_schedule_pairs
 from repro.conv.stages import stage_trace
 from repro.conv.netplan import (
-    NetworkConv, NetworkPlan, NetworkProfile, PreparedNetwork, plan_network,
+    NetworkConv, NetworkPlan, NetworkProfile, PreparedNetwork,
+    BucketedNetworkPlan, plan_network,
     plan_network_buckets, prepare_network_buckets, bucket_report,
+)
+from repro.conv.export import (
+    ArtifactMismatch, LoadedConv, LoadedNetwork, export_network,
+    load_network, plan_fingerprint,
 )
 from repro.conv.analyze import (
     PlanProfile, CheckReport, Violation, analyze, register_invariant,
@@ -36,8 +41,10 @@ _backends.register_builtin()
 __all__ = [
     "ConvPlan", "PreparedConv", "plan_conv", "conv2d", "Epilogue",
     "NetworkConv", "NetworkPlan", "NetworkProfile", "PreparedNetwork",
-    "plan_network", "plan_network_buckets", "prepare_network_buckets",
-    "bucket_report",
+    "BucketedNetworkPlan", "plan_network",
+    "plan_network_buckets", "prepare_network_buckets", "bucket_report",
+    "ArtifactMismatch", "LoadedConv", "LoadedNetwork", "export_network",
+    "load_network", "plan_fingerprint",
     "plan_cache_info", "clear_plan_cache", "plan_cache_capacity",
     "prepared_cache_info", "clear_prepared_cache",
     "stage_trace",

@@ -467,7 +467,7 @@ def _cost_model_config(spec: ConvSpec, schedule: str, mesh, three_m,
                        us_per_call=None, source="cost-model")
 
 
-def tune(x_shape, k_shape, *, padding=(0, 0), delta: int = 16,
+def tune(spec, k_shape=None, *, padding=None, delta: Optional[int] = None,
          schedule: str = "auto", mesh=None, three_m: bool = True,
          compute_dtype=None, data_axis: str = "data",
          model_axis: str = "model",
@@ -480,8 +480,30 @@ def tune(x_shape, k_shape, *, padding=(0, 0), delta: int = 16,
     sweep, or cost-model fallback (measurement disabled / every candidate
     failed), in that order.  Only measured winners are persisted — a
     cost-model fallback stays cold so enabling measurement later re-tunes.
+
+    ``spec`` is the same first positional ``plan_conv`` takes: either a
+    ``ConvSpec`` (geometry + padding + delta in one object) or the input
+    shape ``(B, C, H, W)`` with ``k_shape``/``padding``/``delta`` given
+    separately.
     """
     global _hits, _misses, _fallbacks, _measured
+    if isinstance(spec, ConvSpec):
+        if k_shape is not None or padding is not None or delta is not None:
+            raise TypeError(
+                "tune(spec, ...): a ConvSpec already carries k_shape/"
+                "padding/delta — pass them only with the shape-tuple form")
+        x_shape = (spec.B, spec.C, spec.H, spec.W)
+        k_shape = (spec.Cout, spec.C, spec.kh, spec.kw)
+        padding = (spec.pad_h, spec.pad_w)
+        delta = spec.delta
+    else:
+        if k_shape is None:
+            raise TypeError(
+                "tune(x_shape, k_shape, ...): k_shape is required with "
+                "the shape-tuple form (or pass a ConvSpec)")
+        x_shape = spec
+        padding = (0, 0) if padding is None else padding
+        delta = 16 if delta is None else delta
     x_shape = tuple(map(int, x_shape))
     k_shape = tuple(map(int, k_shape))
     padding = _normalize_padding(padding)

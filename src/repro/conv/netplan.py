@@ -13,13 +13,21 @@ against the shared plan cache:
     ], backend="fft-xla", mesh=mesh, schedule="nfft")
 
     # serving: one invalidation sweep per weight update
-    prepared = net.prepare_all(params, weights_version=step)
+    prepared = net.prepare(params, weights_version=step)
     y = prepared["conv1"](x, bias=params["conv1/bias"])
 
-``prepare_all`` runs each layer's kernel transform exactly once per
-``weights_version`` (repeat calls under the same version hit the prepared
-cache; a new version after a weight update re-transforms everything in one
-sweep), which is the serving lifecycle the ROADMAP north-star wants.
+    # fleet cold-start: build once, deploy many (repro.conv.export)
+    net.export("plans.rpa", params=params, weights_version=step)
+
+``NetworkPlan.prepare`` runs each layer's kernel transform exactly once
+per ``weights_version`` (repeat calls under the same version hit the
+prepared cache; a new version after a weight update re-transforms
+everything in one sweep), which is the serving lifecycle the ROADMAP
+north-star wants.  ``plan_network(make_layers, buckets=batches)`` plans
+one network per padded batch bucket (a ``BucketedNetworkPlan`` view) —
+the serve engine's startup sweep.  The older ``prepare_all`` /
+``plan_network_buckets`` / ``prepare_network_buckets`` /
+``bucket_report`` spellings remain as DeprecationWarning shims.
 
 ``NetworkPlan.report()`` aggregates trace-time stage-op and collective
 counts over the whole net, so "how many all_to_alls does one forward pass
@@ -33,7 +41,8 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Any, Mapping, Sequence
+import warnings
+from typing import Any, Callable, Mapping, Optional, Sequence, Union
 
 from repro.conv.epilogue import Epilogue
 from repro.conv.plan import ConvPlan, PreparedConv, plan_conv
@@ -152,8 +161,8 @@ class NetworkPlan:
         return tuple(self.plans)
 
     # ---- serving ----------------------------------------------------------
-    def prepare_all(self, params: Mapping[str, Any], *,
-                    weights_version=None) -> PreparedNetwork:
+    def prepare(self, params: Mapping[str, Any], *,
+                weights_version=None) -> PreparedNetwork:
         """Prepare every layer's kernel under one ``weights_version``.
 
         ``params`` maps layer name -> kernel array (extra keys — biases,
@@ -166,13 +175,35 @@ class NetworkPlan:
         missing = [n for n in self.plans if n not in params]
         if missing:
             raise ValueError(
-                f"prepare_all: params missing kernels for layers {missing}")
+                f"prepare: params missing kernels for layers {missing}")
         layers = collections.OrderedDict(
             (name, plan.prepare(params[name],
                                 weights_version=weights_version))
             for name, plan in self.plans.items())
         return PreparedNetwork(layers=layers,
                                weights_version=weights_version)
+
+    def prepare_all(self, params: Mapping[str, Any], *,
+                    weights_version=None) -> PreparedNetwork:
+        """Deprecated spelling of ``NetworkPlan.prepare``."""
+        warnings.warn(
+            "NetworkPlan.prepare_all is deprecated; use "
+            "NetworkPlan.prepare(params, weights_version=...)",
+            DeprecationWarning, stacklevel=2)
+        return self.prepare(params, weights_version=weights_version)
+
+    def export(self, path: str, params: Optional[Mapping[str, Any]] = None,
+               *, weights_version=None) -> str:
+        """AOT-export this network to a plan artifact
+        (``repro.conv.export``): every layer's jit lowered through
+        ``jax.export`` plus its resolved config and plan-lint
+        fingerprint.  With ``params`` the artifact is *prepared* (the
+        transformed kernel slabs ride along under ``weights_version``);
+        ``load_network(path)`` rehydrates it on a fresh worker with zero
+        retracing."""
+        from repro.conv.export import export_network
+        return export_network(self, path, params=params,
+                              weights_version=weights_version)
 
     # ---- introspection ----------------------------------------------------
     def tuning_report(self) -> dict:
@@ -290,13 +321,69 @@ class NetworkPlan:
         return "\n".join(lines)
 
 
-def plan_network(layers: Sequence[NetworkConv], *, backend: str = "auto",
+@dataclasses.dataclass(frozen=True, eq=False)
+class BucketedNetworkPlan:
+    """One ``NetworkPlan`` per padded batch-size bucket — the serve
+    engine's startup sweep as a first-class view.  Mapping-like over
+    ``bucket -> NetworkPlan``; ``prepare``/``export`` sweep every bucket
+    under ONE ``weights_version``."""
+    nets: "collections.OrderedDict[int, NetworkPlan]"
+
+    def __getitem__(self, bucket: int) -> NetworkPlan:
+        return self.nets[bucket]
+
+    def __iter__(self):
+        return iter(self.nets)
+
+    def __len__(self):
+        return len(self.nets)
+
+    def items(self):
+        return self.nets.items()
+
+    def keys(self):
+        return self.nets.keys()
+
+    def values(self):
+        return self.nets.values()
+
+    def prepare(self, params: Mapping[str, Any], *,
+                weights_version=None) -> "collections.OrderedDict":
+        """``NetworkPlan.prepare`` for every bucket under ONE
+        ``weights_version``: each distinct (plan, kernel) pair
+        transforms once — buckets sharing a geometry hit the prepared
+        cache — and a weight update is one sweep re-preparing all
+        buckets under the next version."""
+        return collections.OrderedDict(
+            (b, net.prepare(params, weights_version=weights_version))
+            for b, net in self.nets.items())
+
+    def report(self) -> dict:
+        """Cross-bucket dedupe and cost summary: how many *distinct*
+        frozen plans the bucket set resolves to (the shared-cache dedupe
+        the serve engine relies on), plus per-bucket layer counts and
+        FLOPs/pass."""
+        return _bucket_report(self.nets)
+
+    def export(self, path: str,
+               params: Optional[Mapping[str, Any]] = None, *,
+               weights_version=None) -> str:
+        """AOT-export every bucket's network into one plan artifact
+        (labels ``b<batch>``); see ``repro.conv.export``."""
+        from repro.conv.export import export_network
+        return export_network(self, path, params=params,
+                              weights_version=weights_version)
+
+
+def plan_network(layers: Union[Sequence[NetworkConv], Callable], *,
+                 buckets: Optional[Sequence[int]] = None,
+                 backend: str = "auto",
                  schedule: str = "auto", mesh=None, delta: int = 16,
                  three_m: bool = True, compute_dtype=None,
                  data_axis: str = "data", model_axis: str = "model",
                  replicate_kernel_transform: bool = False,
                  spectrum: str = "auto",
-                 overlap: str = "off") -> NetworkPlan:
+                 overlap: str = "off"):
     """Resolve every conv layer of a model in one planning pass.
 
     All layers share the network-wide knobs given here (backend, schedule,
@@ -305,67 +392,53 @@ def plan_network(layers: Sequence[NetworkConv], *, backend: str = "auto",
     same-geometry layers (and repeat ``plan_network`` calls) share frozen
     ``ConvPlan`` objects.
 
+    With ``buckets=batches``, ``layers`` must instead be a callable
+    ``make_layers(batch)`` returning the ``NetworkConv`` sequence for one
+    padded batch size; the result is a ``BucketedNetworkPlan`` (one
+    ``NetworkPlan`` per bucket, shared-cache dedupe across buckets) — the
+    startup sweep of the continuous-batching serve engine.
+
     With ``backend="tuned"`` this is the whole-network tuning sweep: every
     *distinct* layer geometry is measured once (shared-cache dedupe covers
     repeats) and ``NetworkPlan.tuning_report()`` lists the per-layer
     winners.
     """
-    names = [l.name for l in layers]
-    dupes = [n for n, c in collections.Counter(names).items() if c > 1]
-    if dupes:
-        raise ValueError(f"duplicate layer names: {dupes}")
     shared = dict(backend=backend, schedule=schedule, mesh=mesh, delta=delta,
                   three_m=three_m, compute_dtype=compute_dtype,
                   data_axis=data_axis, model_axis=model_axis,
                   replicate_kernel_transform=replicate_kernel_transform,
                   spectrum=spectrum, overlap=overlap)
+    if buckets is not None:
+        if not callable(layers):
+            raise TypeError(
+                "plan_network(..., buckets=...) needs a make_layers(batch) "
+                "callable, not a layer sequence")
+        dupes = [b for b, c in collections.Counter(buckets).items()
+                 if c > 1]
+        if dupes:
+            raise ValueError(f"duplicate bucket batch sizes: {dupes}")
+        nets = collections.OrderedDict(
+            (int(b), plan_network(layers(int(b)), **shared))
+            for b in buckets)
+        return BucketedNetworkPlan(nets=nets)
+    if callable(layers):
+        raise TypeError(
+            "plan_network got a callable layer factory; pass buckets= "
+            "to plan per batch bucket, or the layer sequence itself")
+    names = [l.name for l in layers]
+    dupes = [n for n, c in collections.Counter(names).items() if c > 1]
+    if dupes:
+        raise ValueError(f"duplicate layer names: {dupes}")
     plans = collections.OrderedDict(
         (l.name, plan_conv(l.x_shape, l.k_shape, **l.plan_kwargs(shared)))
         for l in layers)
     return NetworkPlan(plans=plans)
 
 
-# --------------------------------------------------------------------------
-# Per-bucket planning (the serving batcher's startup sweep)
-# --------------------------------------------------------------------------
-
-def plan_network_buckets(make_layers, batches: Sequence[int],
-                         **plan_kwargs) -> "collections.OrderedDict":
-    """One ``NetworkPlan`` per padded batch-size bucket.
-
-    ``make_layers(batch)`` returns the ``NetworkConv`` sequence for one
-    padded input shape; every bucket resolves through the shared plan
-    cache, so buckets that collapse onto the same geometries (and repeat
-    sweeps at process restart) share frozen ``ConvPlan`` objects.  This
-    is the startup sweep of the continuous-batching serve engine
-    (``repro.launch.batcher``) — with ``backend="tuned"`` it is also the
-    per-bucket tuning sweep.
-    """
-    dupes = [b for b, c in collections.Counter(batches).items() if c > 1]
-    if dupes:
-        raise ValueError(f"duplicate bucket batch sizes: {dupes}")
-    return collections.OrderedDict(
-        (int(b), plan_network(make_layers(int(b)), **plan_kwargs))
-        for b in batches)
-
-
-def prepare_network_buckets(nets: Mapping[int, NetworkPlan],
-                            params: Mapping[str, Any], *,
-                            weights_version=None
-                            ) -> "collections.OrderedDict":
-    """``prepare_all`` for every bucket under ONE ``weights_version``:
-    each distinct (plan, kernel) pair transforms once — buckets sharing
-    a geometry hit the prepared cache — and a weight update is one
-    sweep re-preparing all buckets under the next version."""
-    return collections.OrderedDict(
-        (b, net.prepare_all(params, weights_version=weights_version))
-        for b, net in nets.items())
-
-
-def bucket_report(nets: Mapping[int, NetworkPlan]) -> dict:
-    """Cross-bucket dedupe and cost summary: how many *distinct* frozen
-    plans the bucket set resolves to (the shared-cache dedupe the serve
-    engine relies on), plus per-bucket layer counts and FLOPs/pass."""
+def _bucket_report(nets: Mapping[Any, NetworkPlan]) -> dict:
+    """Cross-bucket dedupe/cost summary over any label -> NetworkPlan
+    mapping (shared by ``BucketedNetworkPlan.report`` and the serve
+    engine's label-keyed view)."""
     distinct = {id(p) for net in nets.values()
                 for p in net.plans.values()}
     per_bucket = {
@@ -381,3 +454,39 @@ def bucket_report(nets: Mapping[int, NetworkPlan]) -> dict:
                          else 1.0),
         "buckets": per_bucket,
     }
+
+
+# --------------------------------------------------------------------------
+# Deprecated bucket-helper shims (pre-BucketedNetworkPlan spellings)
+# --------------------------------------------------------------------------
+
+def plan_network_buckets(make_layers, batches: Sequence[int],
+                         **plan_kwargs) -> BucketedNetworkPlan:
+    """Deprecated: use ``plan_network(make_layers, buckets=batches)``."""
+    warnings.warn(
+        "plan_network_buckets is deprecated; use "
+        "plan_network(make_layers, buckets=batches)",
+        DeprecationWarning, stacklevel=2)
+    return plan_network(make_layers, buckets=batches, **plan_kwargs)
+
+
+def prepare_network_buckets(nets: Mapping[int, NetworkPlan],
+                            params: Mapping[str, Any], *,
+                            weights_version=None
+                            ) -> "collections.OrderedDict":
+    """Deprecated: use ``BucketedNetworkPlan.prepare``."""
+    warnings.warn(
+        "prepare_network_buckets is deprecated; use "
+        "BucketedNetworkPlan.prepare(params, weights_version=...)",
+        DeprecationWarning, stacklevel=2)
+    return collections.OrderedDict(
+        (b, net.prepare(params, weights_version=weights_version))
+        for b, net in nets.items())
+
+
+def bucket_report(nets: Mapping[Any, NetworkPlan]) -> dict:
+    """Deprecated: use ``BucketedNetworkPlan.report``."""
+    warnings.warn(
+        "bucket_report is deprecated; use BucketedNetworkPlan.report()",
+        DeprecationWarning, stacklevel=2)
+    return _bucket_report(nets)

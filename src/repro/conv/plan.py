@@ -527,7 +527,7 @@ def _resolve(x_shape, k_shape, padding, delta, backend, schedule, mesh,
                     epilogue=epilogue, spectrum=spectrum, overlap=overlap)
 
 
-def plan_conv(x_shape, k_shape, *, padding=0, delta: int = 16,
+def plan_conv(spec, k_shape=None, *, padding=None, delta: Optional[int] = None,
               backend: str = "auto", schedule: str = "auto", mesh=None,
               three_m: bool = True, bm=None, bn=None, bk=None, dft_bt=None,
               compute_dtype=None, data_axis: str = "data",
@@ -540,9 +540,13 @@ def plan_conv(x_shape, k_shape, *, padding=0, delta: int = 16,
     """Create (or fetch from the plan cache) a ``ConvPlan``.
 
     Args:
-      x_shape: input shape ``(B, C, H, W)``.
-      k_shape: kernel shape ``(C', C, kh, kw)`` with ``kh, kw <= delta``.
-      padding: int or ``(ph, pw)`` zero padding.
+      spec: a ``ConvSpec`` (geometry + padding + delta in one object —
+        the same spec ``autotune.tune`` accepts), or the input shape
+        ``(B, C, H, W)`` with ``k_shape``/``padding``/``delta`` given
+        separately.
+      k_shape: kernel shape ``(C', C, kh, kw)`` with ``kh, kw <= delta``
+        (shape-tuple form only — a ``ConvSpec`` already carries it).
+      padding: int or ``(ph, pw)`` zero padding (default 0).
       delta: FFT tile size (the paper uses 16).
       backend: ``"direct"`` | ``"fft-xla"`` | ``"fft-pallas"`` | ``"auto"``
         (cost-model crossover; never auto-selects Pallas) | ``"tuned"``
@@ -595,6 +599,23 @@ def plan_conv(x_shape, k_shape, *, padding=0, delta: int = 16,
       ``plan.prepare(k)``.
     """
     global _cache_hits, _cache_misses
+    if isinstance(spec, ConvSpec):
+        if k_shape is not None or padding is not None or delta is not None:
+            raise TypeError(
+                "plan_conv(spec, ...): a ConvSpec already carries k_shape/"
+                "padding/delta — pass them only with the shape-tuple form")
+        x_shape = (spec.B, spec.C, spec.H, spec.W)
+        k_shape = (spec.Cout, spec.C, spec.kh, spec.kw)
+        padding = (spec.pad_h, spec.pad_w)
+        delta = spec.delta
+    else:
+        if k_shape is None:
+            raise TypeError(
+                "plan_conv(x_shape, k_shape, ...): k_shape is required "
+                "with the shape-tuple form (or pass a ConvSpec)")
+        x_shape = spec
+        padding = 0 if padding is None else padding
+        delta = 16 if delta is None else delta
     x_shape, k_shape = tuple(map(int, x_shape)), tuple(map(int, k_shape))
     padding = _normalize_padding(padding)
     epilogue = Epilogue() if epilogue is None else epilogue

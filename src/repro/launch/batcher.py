@@ -9,11 +9,15 @@ the serving analogue of the paper's plan-once/execute-many NUMA pipeline:
   1. A ``BucketPolicy`` fixes a small set of padded batch shapes
      (powers of two up to ``max_batch``, optionally a few image sizes).
   2. At startup the engine plans (``plan_network``, optionally
-     ``backend="tuned"``) and prepares (``prepare_all``) one network per
-     bucket — same-geometry buckets dedupe through the shared plan and
-     prepared caches — and jit-compiles one executor per (replica,
-     bucket).  The steady state executes only prepared, epilogue-fused
-     plans: zero re-planning, zero re-tracing on the hot path.
+     ``backend="tuned"``) and prepares (``NetworkPlan.prepare``) one
+     network per bucket — same-geometry buckets dedupe through the
+     shared plan and prepared caches — and jit-compiles one executor per
+     (replica, bucket).  With ``load_plans=<artifact>`` the whole sweep
+     is replaced by rehydrating an AOT plan artifact
+     (``repro.conv.export``): zero plan_conv calls, zero kernel
+     transforms, zero retraces at startup.  The steady state executes
+     only prepared, epilogue-fused plans: zero re-planning, zero
+     re-tracing on the hot path.
   3. ``submit`` enqueues requests; ``drain`` packs the FIFO queue into
      bucket batches (a batching-window/timeout knob trades latency for
      occupancy), pads to the bucket, executes on the next replica
@@ -37,6 +41,7 @@ import collections
 import dataclasses
 import itertools
 import time
+import warnings
 from typing import Any, Callable, Optional, Sequence
 
 
@@ -191,8 +196,14 @@ class ServeEngine:
         so per-request latency is real; ``"async"`` only synchronizes at
         ``finish()`` (throughput mode — percentiles then measure
         dispatch, not completion, and are flagged in the report).
-      weights_version: forwarded to ``prepare_all`` (a weight update is
-        ``update_weights`` = one invalidation sweep per bucket).
+      weights_version: forwarded to ``NetworkPlan.prepare`` (a weight
+        update is ``update_weights`` = one invalidation sweep per
+        bucket, which also drops any loaded plan artifact).
+      load_plans: path to an AOT plan artifact (``repro.conv.export``;
+        built by ``export_plans`` or ``serve --export-plans``).  Startup
+        becomes artifact-load instead of plan+prepare+compile per bucket
+        per replica; on any mismatch (device kind, jax version, bucket
+        set, weights version) the engine warns and builds live.
       plan_kwargs: shared ``plan_network`` knobs (backend=, mesh=, ...).
     """
 
@@ -203,6 +214,7 @@ class ServeEngine:
                  mode: str = "bucketed", timing: str = "per-batch",
                  weights_version: Any = 0, collect_results: bool = True,
                  warm: bool = True, clock: Callable = time.monotonic,
+                 load_plans: Optional[str] = None,
                  **plan_kwargs):
         if mode not in ("bucketed", "pad-max", "replan"):
             raise ValueError(f"unknown mode {mode!r}")
@@ -210,6 +222,9 @@ class ServeEngine:
             raise ValueError(f"unknown timing {timing!r}")
         if replicas < 1:
             raise ValueError(f"replicas must be >= 1, got {replicas}")
+        if load_plans is not None and mode != "bucketed":
+            raise ValueError("load_plans requires mode='bucketed'")
+        t_startup = time.perf_counter()
         self.policy = policy
         self.mode = mode
         self.timing = timing
@@ -238,14 +253,27 @@ class ServeEngine:
 
         self.nets: dict = collections.OrderedDict()
         self._exec: list = [dict() for _ in range(replicas)]
+        self._bucket_x: dict = {}
+        self.plan_source = "live"
         if mode != "replan":
             batches = (policy.batch_buckets() if mode == "bucketed"
                        else (policy.max_batch,))
-            for key in self._bucket_keys(batches):
-                self._build_bucket(key)
+            keys = self._bucket_keys(batches)
+            if load_plans is not None:
+                try:
+                    self._load_buckets(load_plans, keys)
+                    self.plan_source = "aot"
+                except Exception as e:
+                    warnings.warn(
+                        f"plan artifact {load_plans!r} unusable ({e}); "
+                        "falling back to live planning", stacklevel=2)
+            if self.plan_source != "aot":
+                for key in keys:
+                    self._build_bucket(key)
         self._warm_plan_misses: Optional[int] = None
         if warm:
             self.warm()
+        self.startup_s = time.perf_counter() - t_startup
 
     # ---- bucket construction ---------------------------------------------
     def _bucket_keys(self, batches) -> list:
@@ -267,12 +295,70 @@ class ServeEngine:
         from repro.conv.netplan import plan_network
         net = plan_network(self._layers_for(key), **self._plan_kwargs)
         self.nets[key] = net
+        self._bucket_x[key] = net[net.layer_names[0]].x_shape
         fwd = self._forward
         for r in range(self.replicas):
-            prepared = net.prepare_all(
+            prepared = net.prepare(
                 self._params[r], weights_version=self.weights_version)
             self._exec[r][key] = jax.jit(
                 lambda x, _p=prepared: fwd(_p, x))
+
+    def _load_buckets(self, path: str, keys) -> None:
+        """Rehydrate every bucket executor from an AOT plan artifact —
+        zero plan_conv calls, zero kernel transforms, zero layer
+        retraces.  Any mismatch raises (the constructor catches it and
+        builds live): artifact-level incompatibility, a bucket missing
+        from the artifact, or a stale ``weights_version``."""
+        import jax
+        from repro.conv import export as planx
+        arts = planx.load_network(path, on_mismatch="error")
+        if isinstance(arts, planx.LoadedNetwork):
+            arts = {"net": arts}
+        fwd = self._forward
+        for key in keys:
+            label = self._label(*key)
+            if label not in arts:
+                raise planx.ArtifactMismatch(
+                    f"artifact has no bucket {label!r} "
+                    f"(has: {sorted(arts)})")
+            net = arts[label]
+            if net.weights_version != self.weights_version:
+                raise planx.ArtifactMismatch(
+                    f"artifact weights_version {net.weights_version!r} "
+                    f"!= engine weights_version "
+                    f"{self.weights_version!r}")
+            self._bucket_x[key] = tuple(net.x_shape)
+            # Native-executable layers (zero-compile rehydration) cannot
+            # be traced through an outer jit — chain them eagerly; each
+            # layer IS a compiled XLA module already.  Portable StableHLO
+            # fallbacks compose under jit as usual.
+            native = any(getattr(lc, "native", False)
+                         for lc in net.layers.values())
+            for r in range(self.replicas):
+                if native:
+                    self._exec[r][key] = lambda x, _p=net: fwd(_p, x)
+                else:
+                    self._exec[r][key] = jax.jit(
+                        lambda x, _p=net: fwd(_p, x))
+
+    def export_plans(self, path: str) -> str:
+        """AOT-export every bucket's planned+prepared network (replica
+        0's params) into one artifact keyed by the current
+        ``weights_version`` — the build-once half of fleet cold-start
+        (``load_plans=`` / ``serve --load-plans`` is the deploy-many
+        half)."""
+        if not self.nets:
+            raise RuntimeError(
+                "export_plans needs a live-planned bucketed engine "
+                "(a loaded-artifact engine has no NetworkPlans to "
+                "export; rebuild with load_plans=None)")
+        from repro.conv import export as planx
+        nets = collections.OrderedDict(
+            (self._label(b, img), net)
+            for (b, img), net in self.nets.items())
+        return planx.export_network(
+            nets, path, params=self._params[0],
+            weights_version=self.weights_version)
 
     def _executor(self, key, replica):
         ex = self._exec[replica].get(key)
@@ -292,19 +378,22 @@ class ServeEngine:
         import jax
         import jax.numpy as jnp
         from repro.conv.plan import plan_cache_info
-        for key, net in self.nets.items():
-            x_shape = net[net.layer_names[0]].x_shape
-            x = jnp.zeros(x_shape, jnp.float32)
+        for key in self._exec[0]:
+            x = jnp.zeros(self._bucket_x[key], jnp.float32)
             for r in range(self.replicas):
                 jax.block_until_ready(self._exec[r][key](x))
         self._warm_plan_misses = plan_cache_info().misses
 
     def update_weights(self, params: dict, *, weights_version) -> None:
         """Weight update: one invalidation sweep re-preparing every
-        bucket on every replica under the new version."""
+        bucket on every replica under the new version.  An engine
+        started from a plan artifact drops it here (the artifact is
+        keyed to the old ``weights_version``) and re-plans live —
+        export_plans again to refresh the fleet."""
         self.weights_version = weights_version
         self._params = _replica_params(params, self.replicas)
-        for key in list(self.nets):
+        self.plan_source = "live"
+        for key in list(self._exec[0]):
             self._build_bucket(key)
         self.warm()
 
@@ -487,16 +576,23 @@ class ServeEngine:
             "queue_depth_max": self._queue_depth_max,
             "replica_batches": list(self._replica_batches),
             "plan_cache_misses_after_warmup": misses_after_warm,
+            "startup_s": self.startup_s,
+            "plan_source": self.plan_source,
         }
 
     def bucket_report(self) -> dict:
         """Cross-bucket plan-dedupe/cost summary
-        (``repro.conv.netplan.bucket_report`` over this engine's
-        buckets, keyed by bucket label)."""
-        from repro.conv.netplan import bucket_report
+        (``BucketedNetworkPlan.report`` semantics over this engine's
+        buckets, keyed by bucket label).  Unavailable on an engine
+        started from a plan artifact (no live ``NetworkPlan`` objects)."""
+        if not self.nets:
+            raise RuntimeError(
+                "bucket_report needs live-planned buckets (this engine "
+                "loaded an AOT plan artifact)")
+        from repro.conv.netplan import _bucket_report
         nets = {self._label(b, img): net
                 for (b, img), net in self.nets.items()}
-        return bucket_report(nets)
+        return _bucket_report(nets)
 
     def bench_rows(self, prefix: str = "serve") -> dict:
         """The report in ``BENCH_conv.json`` schema: one row per bucket

@@ -4,7 +4,7 @@ network serving path (whole-net planning + prepared kernels).
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-2.7b --smoke \
         --batch 4 --prompt-len 32 --gen 16
 
-    # the paper's VGG conv trunk through plan_network/prepare_all:
+    # the paper's VGG conv trunk through plan_network/prepare:
     PYTHONPATH=src python -m repro.launch.serve --convnet vgg --smoke \
         --batch 2 --gen 4
 
@@ -66,7 +66,7 @@ def serve_convnet(args):
     """Serve the paper's VGG conv trunk through the network planner.
 
     The whole net is planned once (``plan_network``), every kernel is
-    transformed once per weights version (``prepare_all``), and each
+    transformed once per weights version (``NetworkPlan.prepare``), and each
     request batch runs through the prepared, epilogue-fused plans —
     the serving lifecycle the ROADMAP north-star targets.  A weight
     update is one invalidation sweep (new ``weights_version``).
@@ -116,7 +116,7 @@ def serve_convnet(args):
     forward = _vgg_forward(biases)
 
     t0 = time.time()
-    prepared = net.prepare_all(kernels, weights_version=0)
+    prepared = net.prepare(kernels, weights_version=0)
     t_prepare = time.time() - t0
     x = init((args.batch,) + net[net.layer_names[0]].x_shape[1:], 1.0)
     t0 = time.time()
@@ -140,7 +140,7 @@ def serve_convnet(args):
 
     # weight update -> ONE invalidation sweep; transforms re-run once/layer
     kernels2 = {n: k + 0.01 for n, k in kernels.items()}
-    prepared2 = net.prepare_all(kernels2, weights_version=1)
+    prepared2 = net.prepare(kernels2, weights_version=1)
     jax.block_until_ready(forward(prepared2, x))
     info = prepared_cache_info()
     print(f"convnet=vgg image={image} batch={args.batch} "
@@ -207,7 +207,6 @@ def serve_trace(args):
     reports = {}
     engines = {}
     for mode in modes:
-        t0 = time.time()
         eng = ServeEngine(
             make_layers, kernels, policy=policy, forward=forward,
             replicas=args.replicas,
@@ -217,14 +216,17 @@ def serve_trace(args):
             timing="async" if (args.timing == "async"
                                and not args.serve_compare) else "per-batch",
             collect_results=False, backend=backend,
-            overlap=args.overlap)
-        t_start = time.time() - t0
+            overlap=args.overlap,
+            load_plans=(args.load_plans or None) if mode == "bucketed"
+            else None)
+        t_start = eng.startup_s
         rep = run_trace(eng, trace, make_input=make_input,
                         realtime=args.trace_rate > 0)
         reports[mode] = rep
         engines[mode] = eng
         occ = rep["occupancy"]
-        print(f"serve-trace mode={mode}: startup={t_start:.1f}s "
+        print(f"serve-trace mode={mode} [{eng.plan_source}]: "
+              f"startup={t_start:.1f}s "
               f"wall={rep['wall_s']:.3f}s "
               f"tput={rep['throughput_rows_s']:.1f} rows/s "
               f"p50={rep['p50_us']/1e3:.1f}ms p99={rep['p99_us']/1e3:.1f}ms "
@@ -239,10 +241,64 @@ def serve_trace(args):
                   f"p99={b['p99_us']/1e3:.1f}ms occ={b['occupancy']:.2f}")
         if args.replicas > 1:
             print(f"    replica batches: {rep['replica_batches']}")
-    br = engines["bucketed"].bucket_report()
-    print(f"buckets: {policy.batch_buckets()} x image={image} — "
-          f"{br['n_layer_plans']} layer plans, "
-          f"{br['n_distinct_plans']} distinct (shared-cache dedupe)")
+    bucketed = engines["bucketed"]
+    if bucketed.nets:
+        br = bucketed.bucket_report()
+        print(f"buckets: {policy.batch_buckets()} x image={image} — "
+              f"{br['n_layer_plans']} layer plans, "
+              f"{br['n_distinct_plans']} distinct (shared-cache dedupe)")
+    else:
+        print(f"buckets: {policy.batch_buckets()} x image={image} — "
+              f"rehydrated from plan artifact {args.load_plans}")
+
+    if args.export_plans:
+        p = bucketed.export_plans(args.export_plans)
+        print(f"exported plan artifact: {p}")
+
+    fingerprints_ok = None
+    if args.load_plans and bucketed.plan_source == "aot":
+        # plan-lint certificate: live re-plan of every stored config must
+        # reproduce the export-time PlanProfile fingerprints (run AFTER
+        # the trace so the re-plan never pollutes the hot-path miss count
+        # snapshotted in the report)
+        from repro.conv import export as planx
+        v = planx.verify(args.load_plans)
+        fingerprints_ok = v["ok"]
+        rep = reports["bucketed"]
+        fails = []
+        if not v["ok"]:
+            fails.append(f"export fingerprints diverge from a live "
+                         f"re-plan: {v['mismatches']}")
+        if rep["plan_cache_misses_after_warmup"] != 0:
+            fails.append(
+                f"AOT-loaded engine planned on the hot path: "
+                f"{rep['plan_cache_misses_after_warmup']} plan-cache "
+                "misses after warmup")
+        if fails:
+            raise SystemExit("load-plans certification FAILED:\n  "
+                             + "\n  ".join(fails))
+        print(f"load-plans OK: {v['n_checked']} layer fingerprints "
+              "match a live re-plan, zero plan-cache misses after "
+              "warmup")
+    elif args.load_plans:
+        print(f"load-plans: artifact fell back to live planning "
+              f"(source={bucketed.plan_source})")
+
+    if args.coldstart_out:
+        import json
+        rep = reports["bucketed"]
+        payload = {
+            "coldstart_s": bucketed.startup_s,
+            "source": bucketed.plan_source,
+            "plan_cache_misses_after_warmup":
+                rep["plan_cache_misses_after_warmup"],
+            "fingerprints_verified": fingerprints_ok,
+            "n_buckets": len(policy.batch_buckets()),
+            "image": image,
+        }
+        with open(args.coldstart_out, "w") as fh:
+            json.dump(payload, fh, indent=1, sort_keys=True)
+        print(f"wrote cold-start report to {args.coldstart_out}")
 
     if args.bench_out:
         import json
@@ -330,6 +386,19 @@ def main(argv=None):
     ap.add_argument("--bench-out", default="",
                     help="with --serve-trace: write the serve/* bench "
                          "rows (BENCH_conv.json schema) to this path")
+    ap.add_argument("--export-plans", default="",
+                    help="with --serve-trace: AOT-export every bucket's "
+                         "planned+prepared network to this plan artifact "
+                         "(.rpa) after the run")
+    ap.add_argument("--load-plans", default="",
+                    help="with --serve-trace: start the bucketed engine "
+                         "from an AOT plan artifact (zero retracing) "
+                         "instead of plan+prepare+compile; falls back to "
+                         "live planning with a warning on mismatch")
+    ap.add_argument("--coldstart-out", default="",
+                    help="with --serve-trace: write a cold-start JSON "
+                         "report (coldstart_s, source, plan-cache misses "
+                         "after warmup, fingerprint verification)")
     ap.add_argument("--overlap", default="off",
                     help="conv sub-slab comm/compute overlap: off | "
                          "slab:<k> | auto (sharded schedules only; see "

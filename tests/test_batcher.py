@@ -6,8 +6,9 @@ import numpy as np
 import pytest
 
 from repro.conv import (
-    NetworkConv, clear_plan_cache, clear_prepared_cache, plan_cache_info,
-    plan_network, plan_network_buckets, prepared_cache_info,
+    BucketedNetworkPlan, NetworkConv, clear_plan_cache,
+    clear_prepared_cache, plan_cache_info, plan_network,
+    prepared_cache_info,
 )
 from repro.launch.batcher import (
     BucketPolicy, RequestTooLarge, ServeEngine, TraceRequest, _percentile,
@@ -151,7 +152,7 @@ def test_pad_to_bucket_parity_with_unpadded_execution():
     assert y.shape[0] == 3
 
     net = plan_network(_layers(3), backend="fft-xla")
-    prepared = net.prepare_all(_params(), weights_version=0)
+    prepared = net.prepare(_params(), weights_version=0)
     h = x
     for name in net.layer_names:
         h = prepared[name](h)
@@ -294,14 +295,34 @@ def test_bench_rows_schema_valid_with_percentiles():
 # --------------------------------------------------------------------------
 
 def test_plan_network_buckets_dedupe_report():
-    nets = plan_network_buckets(_layers, (1, 2, 4), backend="fft-xla")
+    nets = plan_network(_layers, buckets=(1, 2, 4), backend="fft-xla")
+    assert isinstance(nets, BucketedNetworkPlan)
     assert tuple(nets) == (1, 2, 4)
-    from repro.conv import bucket_report
-    rep = bucket_report(nets)
+    rep = nets.report()
     assert rep["n_buckets"] == 3
     assert rep["n_layer_plans"] == 6
     # distinct batch -> distinct plans; within a bucket s2's geometry is
     # unique too, so no cross-bucket dedupe in this net
     assert rep["n_distinct_plans"] == 6
     with pytest.raises(ValueError, match="duplicate"):
-        plan_network_buckets(_layers, (2, 2), backend="fft-xla")
+        plan_network(_layers, buckets=(2, 2), backend="fft-xla")
+    # a callable layer factory needs buckets=
+    with pytest.raises(TypeError, match="buckets"):
+        plan_network(_layers, backend="fft-xla")
+
+
+def test_bucket_shims_warn_but_work():
+    from repro.conv import (bucket_report, plan_network_buckets,
+                            prepare_network_buckets)
+    with pytest.warns(DeprecationWarning, match="plan_network_buckets"):
+        nets = plan_network_buckets(_layers, (1, 2), backend="fft-xla")
+    assert tuple(nets) == (1, 2)
+    with pytest.warns(DeprecationWarning, match="bucket_report"):
+        rep = bucket_report(nets)
+    assert rep["n_buckets"] == 2
+    with pytest.warns(DeprecationWarning, match="prepare_network_buckets"):
+        prepared = prepare_network_buckets(nets, _params(),
+                                           weights_version=0)
+    assert tuple(prepared) == (1, 2)
+    with pytest.warns(DeprecationWarning, match="prepare_all"):
+        nets[1].prepare_all(_params(), weights_version=0)

@@ -1,6 +1,7 @@
 """Network-level planning: one resolution pass against the shared plan
-cache, ``prepare_all`` running each layer's kernel transform exactly once
-per weights_version, and the aggregate stage/collective report."""
+cache, ``NetworkPlan.prepare`` running each layer's kernel transform
+exactly once per weights_version, and the aggregate stage/collective
+report."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -45,7 +46,7 @@ def test_plan_network_resolves_through_shared_cache():
     assert plan_cache_info().misses == misses_after_first
 
 
-def test_prepare_all_transforms_once_per_layer_per_version():
+def test_prepare_transforms_once_per_layer_per_version():
     """Acceptance: a multi-layer eval runs the kernel transform exactly
     once per layer per weights_version."""
     clear_prepared_cache()
@@ -56,7 +57,7 @@ def test_prepare_all_transforms_once_per_layer_per_version():
     x = _rand((2, 3, 16, 16), 20)
 
     with stage_trace() as c:
-        prepared = net.prepare_all(params, weights_version=1)
+        prepared = net.prepare(params, weights_version=1)
     assert c["kernel_transform"] == len(net)        # once per layer...
 
     def fwd(prepared, x):
@@ -68,7 +69,7 @@ def test_prepare_all_transforms_once_per_layer_per_version():
     with stage_trace() as c:
         y = fwd(prepared, x)
         fwd(prepared, x)                            # ...and never at eval
-        net.prepare_all(params, weights_version=1)  # same version: hits
+        net.prepare(params, weights_version=1)      # same version: hits
     assert c.get("kernel_transform", 0) == 0
     assert prepared_cache_info().hits >= len(net)
 
@@ -83,7 +84,7 @@ def test_prepare_all_transforms_once_per_layer_per_version():
     # weight update -> ONE sweep re-transforming every layer
     params2 = {n: k + 0.1 for n, k in params.items()}
     with stage_trace() as c:
-        prepared2 = net.prepare_all(params2, weights_version=2)
+        prepared2 = net.prepare(params2, weights_version=2)
     assert c["kernel_transform"] == len(net)
     y2 = fwd(prepared2, x)
     assert not np.allclose(np.asarray(y), np.asarray(y2))
@@ -132,7 +133,7 @@ def test_per_layer_overrides_and_errors():
         plan_network(layers + [layers[0]])
     net2 = plan_network(layers, backend="fft-xla")
     with pytest.raises(ValueError, match="missing kernels"):
-        net2.prepare_all({"c1": _rand((8, 3, 3, 3))}, weights_version=0)
+        net2.prepare({"c1": _rand((8, 3, 3, 3))}, weights_version=0)
 
 
 def test_vgg_network_config():
